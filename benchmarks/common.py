@@ -1,0 +1,59 @@
+"""Shared benchmark utilities."""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeat: int = 1):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return path
+
+
+def trained_cnn(cfg, steps: int = 30, batch: int = 16, lr: float = 2e-3,
+                seed: int = 0):
+    """Lightly train a CNN on the synthetic cluster task so magnitude pruning
+    has structure to exploit (no ImageNet in-container; DESIGN.md §5)."""
+    from repro.data.synthetic import image_batch
+    from repro.models import cnn
+
+    rng = jax.random.PRNGKey(seed)
+    params = cnn.init_params(cfg, rng)
+
+    @jax.jit
+    def step(params, batch_):
+        def lfn(p):
+            return cnn.loss(cfg, p, batch_)[0]
+        l, g = jax.value_and_grad(lfn)(params)
+        params = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params, g)
+        return params, l
+
+    for i in range(steps):
+        params, l = step(params, image_batch(cfg, batch, seed=seed, step=i))
+    return params

@@ -1,0 +1,38 @@
+"""Fig. 1 analogue: the accuracy vs operation-density trade-off frontier
+traced by the hardware-aware search (MobileNetV2, the paper's Fig. 1 model)."""
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed, trained_cnn
+from repro.configs.paper_cnns import MOBILENETV2
+from repro.core.hass import CNNEvaluator, hass_search
+from repro.core.perf_model import FPGAModel
+
+
+def run(iters: int = 16, img_res: int = 64, seed: int = 0):
+    cfg = dataclasses.replace(MOBILENETV2, img_res=img_res)
+    params = trained_cnn(cfg, steps=20)
+    images = jax.random.normal(jax.random.PRNGKey(seed),
+                               (8, img_res, img_res, 3))
+    ev = CNNEvaluator(cfg, params, images, FPGAModel(), budget=5261,
+                      dse_iters=400, cost_cfg=MOBILENETV2)
+    res, us = timed(lambda: hass_search(ev, len(ev.prunable), iters=iters,
+                                        hardware_aware=True, seed=seed))
+    pts = [{"density": 1.0 - t.metrics["spa"], "acc": t.metrics["acc"],
+            "eff": t.metrics["eff"]} for t in res.trials]
+    # pareto frontier (max acc per density bucket)
+    pareto = []
+    for p in sorted(pts, key=lambda p: p["density"]):
+        if not pareto or p["acc"] > pareto[-1]["acc"]:
+            pareto.append(p)
+    save_json("fig1.json", {"points": pts, "pareto": pareto})
+    emit("fig1.frontier", us,
+         f"points={len(pts)} best_acc@dens<0.5="
+         f"{max((p['acc'] for p in pts if p['density'] < 0.5), default=0):.3f}")
+    return pts
+
+
+if __name__ == "__main__":
+    run()

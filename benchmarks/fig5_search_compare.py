@@ -1,0 +1,52 @@
+"""Fig. 5 analogue: hardware-aware vs software-metrics-only sparsity search
+on ResNet-18 — computation efficiency (throughput/area) of the best design
+so far, per TPE iteration. The paper runs 96 iterations; --iters controls it
+(the default keeps the tee'd benchmark run short; EXPERIMENTS.md records the
+96-iteration run)."""
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed, trained_cnn
+from repro.configs import reduce_config
+from repro.configs.paper_cnns import RESNET18
+from repro.core.hass import CNNEvaluator, hass_search
+from repro.core.perf_model import FPGAModel
+
+
+def run(iters: int = 16, img_res: int = 64, seed: int = 0,
+        budget: int = 12234):
+    cfg = dataclasses.replace(RESNET18, img_res=img_res)
+    params = trained_cnn(cfg, steps=20)
+    images = jax.random.normal(jax.random.PRNGKey(seed),
+                               (8, img_res, img_res, 3))
+    ev = CNNEvaluator(cfg, params, images, FPGAModel(), budget=budget,
+                      dse_iters=600, cost_cfg=RESNET18)
+
+    def go(hardware_aware):
+        return hass_search(ev, len(ev.prunable), iters=iters,
+                           hardware_aware=hardware_aware, seed=seed)
+
+    hw_res, us_hw = timed(lambda: go(True))
+    sw_res, us_sw = timed(lambda: go(False))
+    payload = {
+        "iters": iters,
+        "hw_eff_curve": hw_res.running_best("eff"),
+        "sw_eff_curve": sw_res.running_best("eff"),
+        "hw_best": hw_res.best_metrics, "sw_best": sw_res.best_metrics,
+    }
+    save_json("fig5.json", payload)
+    gain = hw_res.best_metrics["eff"] / max(sw_res.best_metrics["eff"], 1e-9)
+    emit("fig5.search_compare", us_hw + us_sw,
+         f"hw_eff={hw_res.best_metrics['eff']:.1f} "
+         f"sw_eff={sw_res.best_metrics['eff']:.1f} gain={gain:.2f}x")
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=96)
+    args = ap.parse_args()
+    run(iters=args.iters)

@@ -1,0 +1,42 @@
+"""Assemble the §Roofline table from experiments/dryrun.json."""
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit
+
+
+def load():
+    path = os.path.join(RESULTS_DIR, "dryrun.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(mesh: str = "pod16x16"):
+    res = load()
+    rows = []
+    for key, rec in sorted(res.items()):
+        if rec.get("status") != "ok" or rec.get("mesh") != mesh:
+            continue
+        rows.append(rec)
+    if not rows:
+        print("no dry-run results yet; run python -m repro.launch.dryrun --all")
+        return []
+    print(f"{'arch':18s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'dom':>10s} {'useful':>7s} {'roofl%':>7s} "
+          f"{'HBM GiB':>8s}")
+    for r in rows:
+        print(f"{r['arch']:18s} {r['shape']:12s} {r['compute_s']:10.3e} "
+              f"{r['memory_s']:10.3e} {r['collective_s']:10.3e} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:7.2f} "
+              f"{100 * r['roofline_frac']:6.1f}% {r['hbm_total_gib']:8.1f}")
+    emit("roofline.cells", 0.0, f"n={len(rows)} mesh={mesh}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    run(**vars(ap.parse_args()))

@@ -1,0 +1,55 @@
+"""Benchmark harness — one entry per paper table/figure + the roofline report.
+
+``python -m benchmarks.run`` prints ``name,us_per_call,derived`` CSV rows.
+Flags scale the heavier searches (--full reproduces the paper's 96-iteration
+budget; default keeps a single-core run under ~15 minutes).
+"""
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-budget searches (96 TPE iters)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: kernels,fig4,fig6,fig5,fig1,table2,roofline")
+    args = ap.parse_args()
+    iters = 96 if args.full else 10
+    t2_iters = 24 if args.full else 8
+
+    from benchmarks import (fig1_frontier, fig4_dse_allocation,
+                            fig5_search_compare, fig6_speedup, kernels_bench,
+                            roofline_report, table2_models)
+    jobs = [
+        ("kernels", lambda: kernels_bench.run()),
+        ("fig4", lambda: fig4_dse_allocation.run()),
+        ("fig6", lambda: fig6_speedup.run()),
+        ("fig1", lambda: fig1_frontier.run(iters=max(iters // 2, 8))),
+        ("fig5", lambda: fig5_search_compare.run(iters=iters)),
+        ("table2", lambda: table2_models.run(iters=t2_iters)),
+        ("roofline", lambda: roofline_report.run()),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, job in jobs:
+        if only and name not in only:
+            continue
+        try:
+            job()
+        except Exception:                                     # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0,FAILED")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

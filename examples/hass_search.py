@@ -1,0 +1,32 @@
+"""The paper's main experiment: hardware-aware sparsity search on ResNet-18,
+hardware-aware vs software-metrics-only (Fig. 5).
+
+    PYTHONPATH=src python examples/hass_search.py --iters 24
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=24)
+    ap.add_argument("--img-res", type=int, default=64)
+    args = ap.parse_args()
+
+    from benchmarks.fig5_search_compare import run
+    payload = run(iters=args.iters, img_res=args.img_res)
+    hw, sw = payload["hw_best"], payload["sw_best"]
+    print(f"\nhardware-aware: eff={hw['eff']:.1f} acc={hw['acc']:.3f} "
+          f"thr={hw['thr']:.0f} img/s dsp={hw['dsp']:.2f}")
+    print(f"software-only : eff={sw['eff']:.1f} acc={sw['acc']:.3f} "
+          f"thr={sw['thr']:.0f} img/s dsp={sw['dsp']:.2f}")
+    print(f"efficiency gain from hardware awareness: "
+          f"{hw['eff'] / max(sw['eff'], 1e-9):.2f}x  (paper Fig. 5: higher)")
+
+
+if __name__ == "__main__":
+    main()

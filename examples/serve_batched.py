@@ -1,0 +1,51 @@
+"""Batched serving demo: prefill + decode with KV cache, continuous batching,
+and the sparse-serving path (activation clipping live at decode).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.models import build_model
+from repro.serve.serve_loop import ServeSession
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--batch-slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config(args.arch))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
+               for _ in range(args.requests)]
+
+    sess = ServeSession(api, params, batch_slots=args.batch_slots,
+                        S_max=args.prompt_len + args.max_new + 8)
+    t0 = time.time()
+    outs = sess.generate(prompts, max_new=args.max_new)
+    dt = time.time() - t0
+    n_tok = sum(len(o) for o in outs)
+    print(f"arch={cfg.name} served {args.requests} requests "
+          f"({n_tok} new tokens) in {dt:.2f}s -> {n_tok / dt:.1f} tok/s "
+          f"on 1 CPU core")
+    print(f"first completion: {outs[0][:10]}...")
+    assert len(outs) == args.requests
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, RWKVConfig,
+                                ShapeConfig, SSMConfig, SHAPES, SHAPE_BY_NAME,
+                                SMOKE_SHAPES, cell_supported, reduce_config)
+
+from repro.configs.deepseek_v3_671b import CONFIG as _deepseek_v3_671b
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral_8x7b
+from repro.configs.qwen3_0_6b import CONFIG as _qwen3_0_6b
+from repro.configs.stablelm_12b import CONFIG as _stablelm_12b
+from repro.configs.qwen2_5_3b import CONFIG as _qwen2_5_3b
+from repro.configs.deepseek_67b import CONFIG as _deepseek_67b
+from repro.configs.chameleon_34b import CONFIG as _chameleon_34b
+from repro.configs.rwkv6_1_6b import CONFIG as _rwkv6_1_6b
+from repro.configs.whisper_base import CONFIG as _whisper_base
+from repro.configs.zamba2_1_2b import CONFIG as _zamba2_1_2b
+from repro.configs.paper_cnns import PAPER_CNNS
+
+ASSIGNED: Dict[str, ModelConfig] = {
+    c.name: c for c in (
+        _deepseek_v3_671b, _mixtral_8x7b, _qwen3_0_6b, _stablelm_12b,
+        _qwen2_5_3b, _deepseek_67b, _chameleon_34b, _rwkv6_1_6b,
+        _whisper_base, _zamba2_1_2b,
+    )
+}
+REGISTRY: Dict[str, ModelConfig] = dict(ASSIGNED)
+REGISTRY.update({c.name: c for c in PAPER_CNNS})
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def list_archs(assigned_only: bool = False) -> List[str]:
+    return sorted(ASSIGNED if assigned_only else REGISTRY)
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "RWKVConfig",
+    "ShapeConfig", "SHAPES", "SHAPE_BY_NAME", "SMOKE_SHAPES",
+    "cell_supported", "reduce_config", "get_config", "list_archs",
+    "ASSIGNED", "REGISTRY", "PAPER_CNNS",
+]

@@ -1,0 +1,182 @@
+"""Accelerator Design-Space Exploration (§V-A of the paper).
+
+Implements, verbatim in structure:
+  1. performance modeling (Eq. 1–3, in ``core.perf_model``),
+  2. resource-constrained rate balancing (Eq. 4–5),
+  3. resource-constrained incrementing (start minimal; repeatedly grow the
+     slowest layer, then re-balance, until the budget R is exhausted),
+  4. partitioning & reconfiguration (SA over pipeline split points; on TPU
+     "full reconfiguration" = switching the mesh program between partitions,
+     amortized by batch size).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.annealing import simulated_annealing
+from repro.core.perf_model import (DesignPoint, HardwareModel, LayerCost,
+                                   pipeline_throughput, t_cycles)
+
+
+@dataclass
+class DSEResult:
+    designs: List[DesignPoint]
+    throughput: float             # samples/cycle (Eq. 3)
+    resource: float               # total resource units (DSPs / tile-lanes)
+    throughput_per_res: float
+    trace: List[Tuple[float, float]]  # (resource, throughput) per increment
+
+    def images_per_s(self, hw: HardwareModel) -> float:
+        return self.throughput * hw.freq
+
+
+def _grow_options(l: LayerCost, d: DesignPoint, hw: HardwareModel):
+    """Candidate increments for one layer: more MACs/SPE or more SPEs."""
+    opts = []
+    if d.macs_per_spe < hw.max_n(l):
+        opts.append(replace(d, macs_per_spe=min(d.macs_per_spe * 2, hw.max_n(l))))
+    if d.spe < hw.max_spe(l):
+        opts.append(replace(d, spe=min(d.spe * 2, hw.max_spe(l))))
+    return opts
+
+
+def rate_balance(layers: Sequence[LayerCost], designs: List[DesignPoint],
+                 hw: HardwareModel, *, protect: Optional[set] = None,
+                 strict: bool = False) -> List[DesignPoint]:
+    """Eq. 4–5: shrink every non-bottleneck layer to the smallest design whose
+    modeled throughput still meets the pipeline's actual rate theta_r.
+
+    ``strict=True`` is used *during* incrementing: a shrink must leave the
+    layer's rate strictly above theta_r. With the literal (non-strict) Eq. 4
+    rule, growing one of several bottleneck-tied layers gets undone by the
+    next balancing pass (rate lands exactly on theta_r and is "still
+    feasible"), deadlocking the greedy loop. Strict balancing keeps every
+    layer within (theta_r, 2*theta_r] during growth; the final non-strict pass
+    reclaims the leftover, which is the paper's Eq. 4 verbatim.
+    ``protect`` exempts the just-grown layer."""
+    protect = protect or set()
+    theta_r = pipeline_throughput(layers, designs, hw)
+    lo = theta_r * (1 + 1e-9) if strict else theta_r * (1 - 1e-12)
+    balanced: List[DesignPoint] = []
+    for i, (l, d) in enumerate(zip(layers, designs)):
+        if i in protect:
+            balanced.append(d)
+            continue
+        best = d
+        changed = True
+        while changed:
+            changed = False
+            for cand in (replace(best, macs_per_spe=max(1, best.macs_per_spe // 2)),
+                         replace(best, spe=max(1, best.spe // 2))):
+                if (cand.spe, cand.macs_per_spe) == (best.spe, best.macs_per_spe):
+                    continue
+                if hw.layer_throughput(l, cand) >= lo:
+                    best = cand
+                    changed = True
+                    break
+        balanced.append(best)
+    return balanced
+
+
+def incremental_dse(layers: Sequence[LayerCost], hw: HardwareModel,
+                    budget: float, *, max_iters: int = 10000) -> DSEResult:
+    """§V-A.3: start resource-minimal, grow the slowest layer, re-balance."""
+    designs = [DesignPoint(1, 1) for _ in layers]
+    trace: List[Tuple[float, float]] = []
+
+    def total_res(ds):
+        return sum(hw.layer_resource(l, d) for l, d in zip(layers, ds))
+
+    for _ in range(max_iters):
+        thr = pipeline_throughput(layers, designs, hw)
+        res = total_res(designs)
+        trace.append((res, thr))
+        # slowest layer
+        rates = [hw.layer_throughput(l, d) for l, d in zip(layers, designs)]
+        slow = int(np.argmin(rates))
+        opts = _grow_options(layers[slow], designs[slow], hw)
+        if not opts:
+            break
+        # pick the increment with best Δthroughput per Δresource
+        def score(opt):
+            dthr = hw.layer_throughput(layers[slow], opt) - rates[slow]
+            dres = hw.layer_resource(layers[slow], opt) - \
+                hw.layer_resource(layers[slow], designs[slow])
+            return dthr / max(dres, 1e-9)
+        opt = max(opts, key=score)
+        cand = list(designs)
+        cand[slow] = opt
+        cand = rate_balance(layers, cand, hw, protect={slow}, strict=True)
+        if total_res(cand) > budget:
+            break
+        designs = cand
+
+    # final literal Eq. 4 pass: trim over-provision, keep the bottleneck set
+    rates = [hw.layer_throughput(l, d) for l, d in zip(layers, designs)]
+    bottleneck = {i for i, r in enumerate(rates) if r <= min(rates) * (1 + 1e-9)}
+    designs = rate_balance(layers, designs, hw, protect=bottleneck)
+    thr = pipeline_throughput(layers, designs, hw)
+    res = total_res(designs)
+    return DSEResult(designs=designs, throughput=thr, resource=res,
+                     throughput_per_res=thr / max(res, 1e-9), trace=trace)
+
+
+# --------------------------------------------------------------------- #
+# Partitioning & reconfiguration (§V-A.4)
+# --------------------------------------------------------------------- #
+@dataclass
+class PartitionResult:
+    cuts: List[int]               # split indices (exclusive prefix ends)
+    batch: int
+    time_per_batch: float         # cycles, incl. reconfiguration
+    throughput: float             # samples/cycle amortized
+
+
+def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
+                       budget: float, *, n_parts: int, batch: int = 256,
+                       reconfig_cycles: float = 5e7, seed: int = 0,
+                       dse_iters: int = 300) -> PartitionResult:
+    """Fold the pipeline into ``n_parts`` sequential partitions, each run with
+    the full budget (FPGA full reconfiguration / TPU program switch). SA over
+    cut positions trades reconfiguration time vs per-partition throughput."""
+    L = len(layers)
+    n_parts = min(n_parts, L)
+
+    def eval_cuts(cuts):
+        total = 0.0
+        prev = 0
+        for c in list(cuts) + [L]:
+            part = layers[prev:c]
+            if not part:
+                return float("inf")
+            r = incremental_dse(part, hw, budget, max_iters=dse_iters)
+            if r.throughput <= 0:
+                return float("inf")
+            total += batch / r.throughput
+            prev = c
+        total += reconfig_cycles * n_parts
+        return total
+
+    if n_parts <= 1:
+        t = eval_cuts([])
+        return PartitionResult([], batch, t, batch / t)
+
+    init = [round(L * (i + 1) / n_parts) for i in range(n_parts - 1)]
+
+    def neighbor(cuts, rng):
+        c = list(cuts)
+        i = rng.integers(len(c))
+        lo = c[i - 1] + 1 if i else 1
+        hi = c[i + 1] - 1 if i + 1 < len(c) else L - 1
+        if hi <= lo:
+            return c
+        c[i] = int(np.clip(c[i] + rng.integers(-2, 3), lo, hi))
+        return c
+
+    best, best_e, _ = simulated_annealing(init, eval_cuts, neighbor,
+                                          steps=60, seed=seed)
+    return PartitionResult(list(best), batch, best_e, batch / best_e)

@@ -1,0 +1,285 @@
+"""HASS performance model — Eq. 1–3 of the paper, plus the TPU mapping.
+
+The paper models a layer-pipelined sparse dataflow accelerator:
+
+    t(S̄)        = ceil((1 - S̄) * M / N)                     (Eq. 1)
+    θ(l, d, S̄)  = (i*o) * M / (C_l * t(S̄))   [outputs/cycle] (Eq. 2)
+    θ(network)  = min_l θ(l, d_l, S̄_l)                       (Eq. 3)
+
+where M = weight/activation pairs per dot product, N = MACs per SPE,
+i*o = parallel SPEs, C_l = dense MAC count of the layer, and S̄ = probability
+that a (weight, activation) pair has at least one zero:
+S̄ = 1 - (1 - S_w)(1 - S_a) under the paper's calibration-based estimate.
+
+Two hardware backends implement the same interface:
+  * ``FPGAModel``  — the paper's own units (DSPs, 250 MHz, images/s) used by
+    the paper-faithful benchmarks (Table II, Fig. 4/5/6).
+  * ``TPUModel``   — the TPU-v5e adaptation: SPEs -> MXU tile lanes, DSPs ->
+    chip-MXU-seconds, with *tile-granular* compute skipping (a systolic array
+    cannot skip single MACs; DESIGN.md §6). Used by the LM-side DSE and the
+    §Roofline accounting.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# ---------------------------------------------------------------------- #
+# TPU v5e hardware constants (per chip)
+# ---------------------------------------------------------------------- #
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+ICI_LINKS = 4                # 2D torus
+HBM_BYTES = 16 * 2 ** 30
+MXU_TILE = 128               # systolic dim: tiles are 128-aligned
+
+
+@dataclass
+class LayerCost:
+    """One pipeline-stage workload (the paper's (l, C_l, M) triple + memory)."""
+    name: str
+    macs: int                     # dense MACs per sample (C_l)
+    m_dot: int                    # M: pairs per dot product (fan-in)
+    weight_count: int
+    act_in: int                   # input activations per sample
+    act_out: int
+    kind: str = "linear"          # conv | linear | attn | other
+    prunable: bool = True
+    s_w: float = 0.0              # weight sparsity (compile-time)
+    s_a: float = 0.0              # activation sparsity (calibrated)
+    s_w_tile: float = 0.0         # fraction of all-zero weight tiles (TPU skip)
+
+    @property
+    def s_pair(self) -> float:
+        """S̄: P(weight==0 or activation==0)."""
+        return 1.0 - (1.0 - self.s_w) * (1.0 - self.s_a)
+
+    @property
+    def s_pair_tile(self) -> float:
+        """Tile-granular S̄ for the MXU backend (weight tiles only are
+        skippable at compile time; activation sparsity does not skip MXU
+        compute — DESIGN.md §6)."""
+        return self.s_w_tile
+
+
+def pair_sparsity(s_w: float, s_a: float) -> float:
+    return 1.0 - (1.0 - s_w) * (1.0 - s_a)
+
+
+def t_cycles(s_bar: float, M: int, N: int) -> int:
+    """Eq. 1: initiation interval of one SPE."""
+    return max(1, math.ceil((1.0 - s_bar) * M / max(N, 1)))
+
+
+@dataclass
+class DesignPoint:
+    """d in the paper: per-layer hardware allocation."""
+    spe: int = 1                  # i*o parallel engines (FPGA) / tile lanes (TPU)
+    macs_per_spe: int = 1         # N
+
+
+@dataclass
+class HardwareModel:
+    freq: float = 250e6
+
+    def layer_throughput(self, l: LayerCost, d: DesignPoint) -> float:
+        """Eq. 2, in samples/cycle."""
+        t = t_cycles(self.effective_sparsity(l), l.m_dot, d.macs_per_spe)
+        return d.spe * l.m_dot / (l.macs * t) if l.macs else float("inf")
+
+    def effective_sparsity(self, l: LayerCost) -> float:
+        raise NotImplementedError
+
+    def layer_resource(self, l: LayerCost, d: DesignPoint) -> float:
+        raise NotImplementedError
+
+    def max_n(self, l: LayerCost) -> int:
+        return max(1, l.m_dot)
+
+    def max_spe(self, l: LayerCost) -> int:
+        return max(1, l.macs // max(l.m_dot, 1))
+
+
+@dataclass
+class FPGAModel(HardwareModel):
+    """The paper's backend: resource = DSPs (1 DSP per MAC), 250 MHz."""
+    dsp_budget: float = 12288     # Alveo U250
+
+    def effective_sparsity(self, l: LayerCost) -> float:
+        return l.s_pair if l.prunable else 0.0
+
+    def layer_resource(self, l: LayerCost, d: DesignPoint) -> float:
+        return d.spe * d.macs_per_spe
+
+
+@dataclass
+class TPUModel(HardwareModel):
+    """TPU adaptation: an SPE lane is one 128x128 MXU tile-row pass; N maps to
+    tiles processed per pass; resource = chip-MXU occupancy (in tile-lanes).
+    Compute skipping is tile-granular (s_w_tile)."""
+    freq: float = 940e6           # v5e MXU clock
+    chips: int = 1
+    lanes_per_chip: int = 4 * 128  # 4 MXUs x 128 rows
+
+    def effective_sparsity(self, l: LayerCost) -> float:
+        return l.s_pair_tile if l.prunable else 0.0
+
+    def layer_resource(self, l: LayerCost, d: DesignPoint) -> float:
+        return d.spe * d.macs_per_spe / MXU_TILE   # tile-lane occupancy
+
+    @property
+    def budget(self) -> float:
+        return self.chips * self.lanes_per_chip
+
+
+def pipeline_throughput(layers: Sequence[LayerCost],
+                        designs: Sequence[DesignPoint],
+                        hw: HardwareModel) -> float:
+    """Eq. 3, samples/cycle."""
+    return min(hw.layer_throughput(l, d) for l, d in zip(layers, designs))
+
+
+# ---------------------------------------------------------------------- #
+# Workload extraction: CNNs (paper models) and LMs (assigned archs)
+# ---------------------------------------------------------------------- #
+def cnn_layer_costs(cfg: ModelConfig) -> List[LayerCost]:
+    from repro.models.cnn import build_specs
+    out: List[LayerCost] = []
+    for s in build_specs(cfg):
+        if s.kind == "conv":
+            m = s.cin * s.k * s.k
+        elif s.kind == "dwconv":
+            m = s.k * s.k
+        elif s.kind == "linear":
+            m = s.cin
+        elif s.kind == "se":
+            m = s.cin
+        else:
+            continue
+        out.append(LayerCost(
+            name=s.name, macs=s.macs, m_dot=m, weight_count=s.weights,
+            act_in=s.cin * s.in_hw ** 2 if s.in_hw else s.cin,
+            act_out=s.cout * s.out_hw ** 2 if s.out_hw else s.cout,
+            kind="conv" if s.kind in ("conv", "dwconv") else "linear",
+            prunable=s.prunable))
+    return out
+
+
+def lm_layer_costs(cfg: ModelConfig, seq_len: int = 1,
+                   per_layer: bool = True) -> List[LayerCost]:
+    """Per-transformer-layer matmul workloads, per token (sample = token)."""
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    out: List[LayerCost] = []
+
+    def add(name, cin, cout, n_apply=1, kind="linear", prunable=True):
+        out.append(LayerCost(name=name, macs=cin * cout * n_apply, m_dot=cin,
+                             weight_count=cin * cout, act_in=cin * n_apply,
+                             act_out=cout * n_apply, kind=kind,
+                             prunable=prunable))
+
+    L = cfg.num_layers
+    for i in range(L if per_layer else 1):
+        tag = f"l{i}"
+        if cfg.mla is not None:
+            m = cfg.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            add(f"{tag}.wq_a", d, m.q_lora_rank)
+            add(f"{tag}.wq_b", m.q_lora_rank, H * qk)
+            add(f"{tag}.wkv_a", d, m.kv_lora_rank + m.qk_rope_head_dim)
+            add(f"{tag}.wkv_b", m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim))
+            add(f"{tag}.wo", H * m.v_head_dim, d)
+            attn_macs = H * (qk + m.v_head_dim) * seq_len
+        elif cfg.rwkv is not None:
+            for nm in ("wr", "wk", "wv", "wg", "wo"):
+                add(f"{tag}.{nm}", d, d)
+            add(f"{tag}.cm_wk", d, cfg.d_ff)
+            add(f"{tag}.cm_wv", cfg.d_ff, d)
+            add(f"{tag}.cm_wr", d, d)
+            attn_macs = d * cfg.rwkv.head_dim      # state update per token
+        elif cfg.ssm is not None:
+            s = cfg.ssm
+            d_in = s.expand * d
+            add(f"{tag}.in_proj", d, 2 * d_in + 2 * s.state_dim + d_in // s.head_dim)
+            add(f"{tag}.out_proj", d_in, d)
+            attn_macs = d_in * s.state_dim * 2     # SSD state update per token
+        else:
+            add(f"{tag}.wq", d, H * hd)
+            add(f"{tag}.wk", d, KV * hd)
+            add(f"{tag}.wv", d, KV * hd)
+            add(f"{tag}.wo", H * hd, d)
+            win = cfg.attn_window or seq_len
+            attn_macs = H * hd * min(seq_len, win)
+        # attention score/value (not weight-prunable: data-data product)
+        out.append(LayerCost(name=f"{tag}.attn", macs=2 * attn_macs,
+                             m_dot=hd, weight_count=0, act_in=d, act_out=d,
+                             kind="attn", prunable=False))
+        if cfg.moe is not None:
+            fe = cfg.moe.expert_d_ff or cfg.d_ff
+            active = cfg.moe.top_k + cfg.moe.num_shared_experts
+            add(f"{tag}.moe_gate", d, fe, n_apply=active)
+            add(f"{tag}.moe_up", d, fe, n_apply=active)
+            add(f"{tag}.moe_down", fe, d, n_apply=active)
+        elif cfg.ssm is None and cfg.rwkv is None:
+            add(f"{tag}.w_gate", d, cfg.d_ff)
+            add(f"{tag}.w_up", d, cfg.d_ff)
+            add(f"{tag}.w_down", cfg.d_ff, d)
+        if cfg.hybrid_attn_every and i % cfg.hybrid_attn_every == 0:
+            add(f"{tag}.shared_qkvo", 2 * d, 4 * d)   # concat-proj + attn blk
+            add(f"{tag}.shared_ffn", d, 2 * cfg.d_ff)
+    add("unembed", d, cfg.vocab_size)
+    return out
+
+
+def param_count(cfg: ModelConfig) -> int:
+    total = sum(l.weight_count for l in lm_layer_costs(cfg)) \
+        if cfg.family != "cnn" else sum(l.weight_count for l in cnn_layer_costs(cfg))
+    if cfg.family != "cnn":
+        total += cfg.vocab_size * cfg.d_model        # embed
+        if cfg.moe is not None:                      # all experts (not just active)
+            fe = cfg.moe.expert_d_ff or cfg.d_ff
+            inactive = cfg.moe.num_experts - cfg.moe.top_k
+            total += cfg.num_layers * inactive * 3 * cfg.d_model * fe
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    active = sum(l.weight_count for l in lm_layer_costs(cfg)) \
+        if cfg.family != "cnn" else sum(l.weight_count for l in cnn_layer_costs(cfg))
+    if cfg.family != "cnn":
+        active += cfg.vocab_size * cfg.d_model
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active * tokens
+
+
+# ---------------------------------------------------------------------- #
+# Roofline terms (used by analysis/roofline.py on dry-run artifacts)
+# ---------------------------------------------------------------------- #
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+             chips: int) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=hlo_flops / (chips * PEAK_FLOPS),
+        memory_s=hlo_bytes / (chips * HBM_BW),
+        collective_s=collective_bytes / (chips * ICI_BW))

@@ -1,0 +1,114 @@
+"""Logical-axis sharding context.
+
+Model code annotates activations with *logical* axis names
+(``shard(x, "batch", "seq", "embed")``); a context installed by the launcher
+maps logical names to physical mesh axes and applies
+``with_sharding_constraint``. Outside any context the calls are identity, so
+the same model code runs on 1 CPU device (tests) and on a 512-chip mesh
+(dry-run / production) unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# Default logical -> physical rules (physical axes: pod, data, model).
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,                 # sequence sharding enabled per-config ("model")
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "layers": None,
+    "fsdp": ("pod", "data"),     # parameter sharding over the data axes
+}
+
+
+class ShardingCtx:
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, Axis]] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def spec(self, *logical: Optional[str]) -> P:
+        axes = []
+        for name in logical:
+            if name is None:
+                axes.append(None)
+                continue
+            phys = self.rules.get(name)
+            if phys is None:
+                axes.append(None)
+            else:
+                # drop axes absent from the mesh (e.g. "pod" on single-pod)
+                if isinstance(phys, tuple):
+                    phys = tuple(a for a in phys if a in self.mesh.axis_names)
+                    phys = phys if phys else None
+                elif phys not in self.mesh.axis_names:
+                    phys = None
+                axes.append(phys)
+        return P(*axes)
+
+
+def current() -> Optional[ShardingCtx]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: Optional[Dict[str, Axis]] = None):
+    prev = current()
+    _state.ctx = ShardingCtx(mesh, rules)
+    try:
+        yield _state.ctx
+    finally:
+        _state.ctx = prev
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        n = 1
+        for a in phys:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(phys, 1)
+
+
+def shard(x, *logical: Optional[str]):
+    """Constrain ``x`` to the logical spec under the active context (else id).
+
+    Axes whose size does not divide the dimension are dropped: a non-dividing
+    constraint (e.g. 8 KV heads on a 16-way model axis) makes GSPMD pad and
+    then 'involuntarily rematerialize' — i.e. all-gather — around it.
+    """
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = ctx.spec(*logical)
+    clean = []
+    for dim, phys in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        n = _axis_size(ctx.mesh, phys)
+        clean.append(phys if (n > 1 and dim % n == 0) or n == 1 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*clean)))
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    ctx = current()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, ctx.spec(*logical))

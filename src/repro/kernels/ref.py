@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def expand_tile_mask(mask: jnp.ndarray, bk: int, bn: int,
+                     K: int, N: int) -> jnp.ndarray:
+    """(K/bk, N/bn) bool tile mask -> (K, N) elementwise mask."""
+    m = jnp.repeat(jnp.repeat(mask, bk, axis=0), bn, axis=1)
+    return m[:K, :N]
+
+
+def block_sparse_matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
+                            mask: jnp.ndarray, bk: int, bn: int
+                            ) -> jnp.ndarray:
+    """x: (M, K); w: (K, N); mask: (ceil(K/bk), ceil(N/bn)) bool.
+
+    Semantics of the kernel: tiles with mask==False contribute exactly zero
+    (they are never loaded), regardless of w's contents there.
+    """
+    K, N = w.shape
+    wm = w * expand_tile_mask(mask, bk, bn, K, N).astype(w.dtype)
+    return jnp.dot(x, wm, preferred_element_type=jnp.float32)
+
+
+def act_clip_ref(x: jnp.ndarray, tau) -> jnp.ndarray:
+    """Zero out |x| < tau (the SPE clip unit)."""
+    return jnp.where(jnp.abs(x) >= tau, x, jnp.zeros_like(x))
+
+
+def act_clip_count_ref(x: jnp.ndarray, tau):
+    y = act_clip_ref(x, tau)
+    return y, jnp.sum(y == 0.0).astype(jnp.int32)

@@ -1,0 +1,205 @@
+"""RWKV6 "Finch": attention-free linear RNN with data-dependent decay.
+
+Time-mix implements the Finch recurrence per head (state S in R^{hd x hd}):
+    y_t = r_t · (S_{t-1} + (u ⊙ k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(w0 + lora_w(x_t)))
+with ddlerp token-shift mixing. The baseline runs the recurrence as a
+lax.scan over time (exact); a chunked matmul form is a §Perf candidate with
+this scan as its oracle. O(1) decode state => long_500k runs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import shard
+from repro.models.common import (act_clip, dense_init, dtype_of, embed_init,
+                                 maybe_scan, rmsnorm)
+
+MIX_KEYS = ("w", "k", "v", "r", "g")
+
+
+def init_params(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    d, L, f = cfg.d_model, cfg.num_layers, cfg.d_ff
+    rw = cfg.rwkv
+    H, hd = d // rw.head_dim, rw.head_dim
+    ks = jax.random.split(rng, 24)
+    blocks = {
+        "ln1": jnp.ones((L, d)), "ln2": jnp.ones((L, d)),
+        # ddlerp token-shift
+        "mu_base": jnp.zeros((L, d)),
+        "mix_w1": dense_init(ks[0], (L, d, 5 * rw.mix_lora)),
+        "mix_w2": dense_init(ks[1], (L, 5, rw.mix_lora, d), in_axis=-2),
+        "mu": jnp.zeros((L, 5, d)),
+        # projections
+        "wr": dense_init(ks[2], (L, d, d)),
+        "wk": dense_init(ks[3], (L, d, d)),
+        "wv": dense_init(ks[4], (L, d, d)),
+        "wg": dense_init(ks[5], (L, d, d)),
+        "wo": dense_init(ks[6], (L, d, d)),
+        # data-dependent decay
+        "w0": jnp.full((L, d), -4.0),
+        "decay_a": dense_init(ks[7], (L, d, rw.decay_lora)),
+        "decay_b": dense_init(ks[8], (L, rw.decay_lora, d)),
+        "u": jnp.zeros((L, H, hd)),          # per-head bonus
+        "ln_x": jnp.ones((L, d)),            # per-head group norm scale
+        # channel-mix
+        "cm_mu_k": jnp.zeros((L, d)),
+        "cm_mu_r": jnp.zeros((L, d)),
+        "cm_wk": dense_init(ks[9], (L, d, f)),
+        "cm_wv": dense_init(ks[10], (L, f, d)),
+        "cm_wr": dense_init(ks[11], (L, d, d)),
+    }
+    return {
+        "embed": embed_init(ks[12], (cfg.vocab_size, d)),
+        "blocks": blocks,
+        "final_norm": jnp.ones((d,)),
+        "lm_head": dense_init(ks[13], (d, cfg.vocab_size)),
+    }
+
+
+def _ddlerp(p, x, sx):
+    """Finch data-dependent token-shift. x, sx: (B,S,d)."""
+    dx = sx - x
+    base = x + dx * p["mu_base"]
+    low = jnp.tanh(base @ p["mix_w1"])                       # (B,S,5*ml)
+    B_, S_, _ = low.shape
+    low = low.reshape(B_, S_, 5, -1)
+    offs = jnp.einsum("bsfm,fmd->bsfd", low, p["mix_w2"])    # (B,S,5,d)
+    mixed = x[:, :, None] + dx[:, :, None] * (p["mu"][None, None] + offs)
+    return {k: mixed[:, :, i] for i, k in enumerate(MIX_KEYS)}
+
+
+def _decay(p, xw):
+    return jnp.exp(-jnp.exp(
+        (p["w0"] + jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]).astype(jnp.float32)))
+
+
+def _time_mix(p, x, cfg, state):
+    """x: (B,S,d). state: {'sx': (B,d), 'S': (B,H,hd,hd)} carried across calls."""
+    B, S, d = x.shape
+    rw = cfg.rwkv
+    H, hd = d // rw.head_dim, rw.head_dim
+    sx = jnp.concatenate([state["sx"][:, None], x[:, :-1]], axis=1)
+    m = _ddlerp(p, x, sx)
+    r = (m["r"] @ p["wr"]).reshape(B, S, H, hd)
+    k = (m["k"] @ p["wk"]).reshape(B, S, H, hd)
+    v = (m["v"] @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(m["g"] @ p["wg"])
+    w = _decay(p, m["w"]).reshape(B, S, H, hd)               # f32 in (0,1)
+    u = p["u"]
+
+    def step(Sst, inp):
+        r_t, k_t, v_t, w_t = inp                             # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                        v_t.astype(jnp.float32))
+        out = jnp.einsum("bhk,bhkv->bhv",
+                         r_t.astype(jnp.float32),
+                         Sst + u[None, :, :, None] * kv)
+        Sst = w_t[..., None] * Sst + kv
+        return Sst, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))  # (S,B,H,hd)
+    S_new, outs = maybe_scan(step, state["S"], xs)
+    y = jnp.moveaxis(outs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    # per-head group norm
+    y = rmsnorm(y.reshape(B, S, H, hd),
+                p["ln_x"].reshape(H, hd), cfg.norm_eps).reshape(B, S, d)
+    y = (y * g) @ p["wo"]
+    return y, {"sx": x[:, -1], "S": S_new}
+
+
+def _channel_mix(p, x, state, act_tau=None):
+    B, S, d = x.shape
+    sx = jnp.concatenate([state["sx"][:, None], x[:, :-1]], axis=1)
+    dx = sx - x
+    xk = act_clip(x + dx * p["cm_mu_k"], act_tau)
+    xr = x + dx * p["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    kk = shard(kk, "batch", None, "ff")
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (act_clip(kk, act_tau) @ p["cm_wv"])
+    return out, {"sx": x[:, -1]}
+
+
+def init_state(cfg: ModelConfig, B: int):
+    d = cfg.d_model
+    rw = cfg.rwkv
+    H, hd = d // rw.head_dim, rw.head_dim
+    L = cfg.num_layers
+    return {
+        "att_sx": jnp.zeros((L, B, d), dtype_of(cfg.dtype)),
+        "ffn_sx": jnp.zeros((L, B, d), dtype_of(cfg.dtype)),
+        "S": jnp.zeros((L, B, H, hd, hd), jnp.float32),
+        "pos": jnp.zeros((B,), jnp.int32),
+    }
+
+
+def forward(cfg: ModelConfig, params, tokens, *, state=None, sparsity=None,
+            remat=None):
+    """Returns (logits, new_state). state=None -> zeros (training)."""
+    dt = dtype_of(cfg.dtype)
+    B, S = tokens.shape
+    if state is None:
+        state = init_state(cfg, B)
+    h = params["embed"].astype(dt)[tokens]
+    h = shard(h, "batch", None, "embed")
+
+    def block(h, xs):
+        p, st, taus = xs
+        p = jax.tree_util.tree_map(
+            lambda a: a.astype(dt) if a.dtype == jnp.float32 else a, p)
+        f_tau = taus.get("ffn") if taus else None
+        a_tau = taus.get("attn") if taus else None
+        x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+        x = act_clip(x, a_tau)
+        y, att_st = _time_mix(p, x, cfg, {"sx": st["att_sx"], "S": st["S"]})
+        h = h + y
+        x = rmsnorm(h, p["ln2"], cfg.norm_eps)
+        y, ffn_st = _channel_mix(p, x, {"sx": st["ffn_sx"]}, f_tau)
+        h = h + y
+        new_st = {"att_sx": att_st["sx"], "S": att_st["S"], "ffn_sx": ffn_st["sx"]}
+        return h, new_st
+
+    if remat:
+        block = jax.checkpoint(block)
+
+    st_in = {k: state[k] for k in ("att_sx", "ffn_sx", "S")}
+
+    def body(c, xs):
+        return block(c, xs)
+
+    taus = sparsity if sparsity else None
+    if taus is None:
+        h, new_st = maybe_scan(lambda c, xs: body(c, (xs[0], xs[1], None)),
+                                 h, (params["blocks"], st_in),
+                                 length=cfg.num_layers)
+    else:
+        h, new_st = maybe_scan(body, h, (params["blocks"], st_in, taus),
+                                 length=cfg.num_layers)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(dt)
+    logits = shard(logits, "batch", None, "vocab")
+    new_state = dict(new_st)
+    new_state["pos"] = state["pos"] + S
+    return logits, new_state
+
+
+def loss(cfg: ModelConfig, params, batch, *, sparsity=None, remat=None):
+    from repro.models.transformer import softmax_xent
+    tokens = batch["tokens"]
+    logits, _ = forward(cfg, params, tokens, sparsity=sparsity, remat=remat)
+    l = softmax_xent(logits[:, :-1], tokens[:, 1:]).mean()
+    return l, {"xent": l}
+
+
+def prefill(cfg: ModelConfig, params, tokens, S_max: int, **kw):
+    logits, state = forward(cfg, params, tokens)
+    return logits[:, -1:], state
+
+
+def decode_step(cfg: ModelConfig, params, state, token):
+    logits, state = forward(cfg, params, token, state=state)
+    return logits, state

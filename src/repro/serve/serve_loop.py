@@ -1,0 +1,84 @@
+"""Batched serving: prefill + decode steps with KV-cache management.
+
+``make_serve_step`` builds the jitted single-token decode used by the serve
+dry-run cells; ``ServeSession`` drives batched requests end-to-end (continuous
+batching over a fixed slot count, greedy/temperature sampling) for the CPU
+examples and integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import ModelAPI
+
+
+def make_serve_step(api: ModelAPI) -> Callable:
+    """(params, cache, token (B,1)) -> (logits (B,1,V), cache)."""
+    def serve_step(params, cache, token):
+        return api.decode_step(params, cache, token)
+    return serve_step
+
+
+def make_prefill(api: ModelAPI, S_max: int) -> Callable:
+    def prefill(params, tokens, **kw):
+        return api.prefill(params, tokens, S_max, **kw)
+    return prefill
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray
+    max_new: int = 16
+    out: List[int] = None
+
+
+class ServeSession:
+    """Fixed-slot continuous batching (tiny vLLM-style front end)."""
+
+    def __init__(self, api: ModelAPI, params, *, batch_slots: int,
+                 S_max: int, temperature: float = 0.0, seed: int = 0):
+        self.api, self.params = api, params
+        self.B, self.S_max = batch_slots, S_max
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(lambda p, c, t: api.decode_step(p, c, t))
+
+    def generate(self, prompts: List[np.ndarray], max_new: int = 16,
+                 frames: Optional[np.ndarray] = None) -> List[List[int]]:
+        """Greedy/temperature generation for a list of equal-batch prompts.
+        Prompts are left-aligned to the same length (synthetic benches use
+        equal lengths; ragged batching = pad to max then mask)."""
+        outs: List[List[int]] = []
+        for i in range(0, len(prompts), self.B):
+            chunk = prompts[i:i + self.B]
+            pad_to = len(chunk[0])
+            toks = np.stack([p[:pad_to] for p in chunk]).astype(np.int32)
+            kw = {}
+            if frames is not None:
+                kw["frames"] = frames[i:i + self.B]
+            logits, cache = self.api.prefill(self.params, jnp.asarray(toks),
+                                             self.S_max, **kw)
+            cur = self._sample(logits)
+            gen = [cur]
+            for _ in range(max_new - 1):
+                logits, cache = self._decode(self.params, cache, cur)
+                cur = self._sample(logits)
+                gen.append(cur)
+            seq = np.concatenate([np.asarray(g) for g in gen], axis=1)
+            outs.extend([list(map(int, row)) for row in seq])
+        return outs
+
+    def _sample(self, logits) -> jnp.ndarray:
+        logits = logits[:, -1]
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        self.rng, k = jax.random.split(self.rng)
+        return jax.random.categorical(
+            k, logits / self.temperature, axis=-1).astype(jnp.int32)[:, None]

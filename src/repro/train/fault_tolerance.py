@@ -1,0 +1,125 @@
+"""Fault tolerance: resilient run loop, elastic re-meshing, straggler watchdog.
+
+At thousand-node scale the failure model is: a pod/slice dies (hardware or
+preemption), a host hangs (straggler), or the job restarts. The strategy here:
+
+  * step-atomic checkpoints (train/checkpoint.py) + deterministic data cursor
+    (data/synthetic.py) => restart is exact,
+  * ``run_resilient`` retries the step loop through injected/real failures,
+    restoring from the newest checkpoint,
+  * ``elastic_remesh`` re-shards the restored state onto whatever mesh the
+    surviving devices form (drop a pod: (2,16,16) -> (16,16)) — sharding
+    rules are rank-polymorphic in axis *names*, so the same rule table
+    produces the new layout,
+  * ``StepWatchdog`` flags stragglers: steps slower than k x the trailing
+    median trigger a (configurable) re-mesh/requeue callback instead of
+    stalling the whole job.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.train.checkpoint import CheckpointManager
+
+log = logging.getLogger("repro.ft")
+
+
+class StepWatchdog:
+    """Trailing-median step timer; flags stragglers at ratio x median."""
+
+    def __init__(self, ratio: float = 3.0, window: int = 20,
+                 grace_steps: int = 3):
+        self.ratio, self.window, self.grace = ratio, window, grace_steps
+        self.times: List[float] = []
+
+    def observe(self, dt: float) -> bool:
+        """Returns True when dt flags a straggler."""
+        self.times.append(dt)
+        self.times = self.times[-self.window:]
+        if len(self.times) <= self.grace:
+            return False
+        med = float(np.median(self.times[:-1]))
+        return dt > self.ratio * max(med, 1e-9)
+
+
+@dataclass
+class ResilienceReport:
+    steps_run: int = 0
+    restarts: int = 0
+    straggler_events: int = 0
+    final_loss: float = float("nan")
+    history: List[float] = field(default_factory=list)
+
+
+def run_resilient(train_step: Callable, state: Any, next_batch: Callable,
+                  *, steps: int, ckpt: CheckpointManager,
+                  ckpt_every: int = 10,
+                  fail_at: Optional[Dict[int, Exception]] = None,
+                  max_restarts: int = 10,
+                  watchdog: Optional[StepWatchdog] = None,
+                  on_straggler: Optional[Callable] = None,
+                  state_restore: Optional[Callable] = None
+                  ) -> ResilienceReport:
+    """Run ``steps`` train steps surviving failures.
+
+    fail_at: {step: exception} — fault injection for tests (the exception is
+    raised after the step's compute, as a crash would land). state_restore:
+    maps the raw (numpy) checkpoint tree back into jax arrays/shardings.
+    """
+    report = ResilienceReport()
+    fail_at = dict(fail_at or {})
+    step = int(np.asarray(state["opt"]["step"]))
+    restarts = 0
+    while step < steps:
+        try:
+            while step < steps:
+                t0 = time.perf_counter()
+                batch = next_batch(step)
+                state, metrics = train_step(state, batch)
+                loss = float(np.asarray(metrics["loss"]))
+                report.history.append(loss)
+                step += 1
+                report.steps_run += 1
+                if step in fail_at:
+                    raise fail_at.pop(step)
+                if watchdog is not None:
+                    if watchdog.observe(time.perf_counter() - t0):
+                        report.straggler_events += 1
+                        if on_straggler is not None:
+                            state = on_straggler(state)
+                if step % ckpt_every == 0 or step == steps:
+                    ckpt.save(step, state, meta={"step": step})
+            break
+        except Exception as e:                        # noqa: BLE001
+            restarts += 1
+            report.restarts = restarts
+            if restarts > max_restarts:
+                raise
+            log.warning("step %d failed (%s); restoring", step, e)
+            restored = ckpt.restore_or_none()
+            if restored is None:
+                raise
+            tree, ck_step, _ = restored
+            state = state_restore(tree) if state_restore else tree
+            step = ck_step
+    ckpt.wait()
+    report.final_loss = report.history[-1] if report.history else float("nan")
+    return report
+
+
+def elastic_remesh(state: Any, new_mesh, state_shape: Any) -> Any:
+    """Re-shard a (host/numpy) state tree onto a new mesh using the same
+    rank-polymorphic rules — the 'drop a pod and keep training' path."""
+    from repro.distributed.sharding import param_specs
+    from jax.sharding import NamedSharding
+
+    specs = param_specs(new_mesh, state_shape)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+        state, specs)

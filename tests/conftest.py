@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests must see the single real CPU device (the dry-run sets its own flags
+# in a separate process). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_ENABLE_X64", "0")

@@ -1,0 +1,76 @@
+"""Prefill + decode must reproduce teacher-forced forward logits, per family.
+(MoE uses an oversized capacity factor so no tokens drop — drops are the one
+legitimate batch-size-dependent difference.)"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.models import build_model
+import repro.models.transformer as tfm
+import repro.models.rwkv as rwkv_m
+import repro.models.ssm as ssm_m
+
+RNG = jax.random.PRNGKey(1)
+B, S, SPLIT = 2, 12, 8
+
+
+def _f32(cfg):
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    return cfg
+
+
+def _teacher(cfg, params, tokens, frames=None):
+    if cfg.rwkv is not None:
+        return rwkv_m.forward(cfg, params, tokens)[0]
+    if cfg.ssm is not None:
+        return ssm_m.forward(cfg, params, tokens)
+    return tfm.lm_forward(cfg, params, tokens, frames=frames)[1]
+
+
+@pytest.mark.parametrize("arch,tol", [
+    ("qwen3-0.6b", 1e-4), ("qwen2.5-3b", 1e-4), ("stablelm-12b", 1e-4),
+    ("chameleon-34b", 1e-4), ("deepseek-67b", 1e-4),
+    ("deepseek-v3-671b", 1e-4), ("mixtral-8x7b", 1e-4),
+    ("rwkv6-1.6b", 1e-4), ("zamba2-1.2b", 5e-4), ("whisper-base", 1e-4),
+])
+def test_decode_matches_teacher_forcing(arch, tol):
+    cfg = _f32(reduce_config(get_config(arch)))
+    api = build_model(cfg)
+    params = api.init(RNG)
+    tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    frames = None
+    if cfg.is_encoder_decoder:
+        frames = jax.random.normal(RNG, (B, cfg.num_frames, cfg.d_model))
+        kw["frames"] = frames
+    ref = _teacher(cfg, params, tokens, frames=frames)
+
+    last, cache = api.prefill(params, tokens[:, :SPLIT], 16, **kw)
+    scale = float(jnp.abs(ref).max())
+    errs = [float(jnp.abs(last[:, 0] - ref[:, SPLIT - 1]).max())]
+    for t in range(SPLIT, S):
+        lg, cache = api.decode_step(params, cache, tokens[:, t:t + 1])
+        errs.append(float(jnp.abs(lg[:, 0] - ref[:, t]).max()))
+    assert max(errs) <= tol * max(scale, 1.0), f"{arch}: {errs}"
+
+
+def test_swa_ring_buffer_beyond_window():
+    """Mixtral-style SWA: decode far past the window stays consistent."""
+    cfg = _f32(reduce_config(get_config("mixtral-8x7b")))   # window 8
+    api = build_model(cfg)
+    params = api.init(RNG)
+    S_long = 24
+    tokens = jax.random.randint(RNG, (B, S_long), 0, cfg.vocab_size)
+    ref = _teacher(cfg, params, tokens)
+    last, cache = api.prefill(params, tokens[:, :8], 32)
+    errs = []
+    for t in range(8, S_long):
+        lg, cache = api.decode_step(params, cache, tokens[:, t:t + 1])
+        errs.append(float(jnp.abs(lg[:, 0] - ref[:, t]).max()))
+    assert max(errs) < 1e-3, errs

@@ -1,0 +1,89 @@
+"""DSE: rate balancing (Eq. 4–5), resource-constrained incrementing, SA
+partitioning, and the Fig. 4 qualitative behaviours."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.paper_cnns import RESNET18
+from repro.core.dse import (incremental_dse, partition_pipeline, rate_balance)
+from repro.core.perf_model import (DesignPoint, FPGAModel, LayerCost,
+                                   cnn_layer_costs, pipeline_throughput)
+
+
+def _layers(sparsities=(0.0, 0.0, 0.0)):
+    return [LayerCost(f"l{i}", macs=4096 * (i + 1), m_dot=64,
+                      weight_count=4096, act_in=1, act_out=1, s_w=s)
+            for i, s in enumerate(sparsities)]
+
+
+def test_rate_balance_never_lowers_pipeline_throughput():
+    hw = FPGAModel()
+    layers = _layers()
+    designs = [DesignPoint(4, 16), DesignPoint(8, 32), DesignPoint(8, 64)]
+    before = pipeline_throughput(layers, designs, hw)
+    balanced = rate_balance(layers, designs, hw)
+    after = pipeline_throughput(layers, balanced, hw)
+    assert after >= before * (1 - 1e-12)
+    # and resource cannot grow
+    res_b = sum(hw.layer_resource(l, d) for l, d in zip(layers, designs))
+    res_a = sum(hw.layer_resource(l, d) for l, d in zip(layers, balanced))
+    assert res_a <= res_b
+
+
+def test_incremental_dse_respects_budget_and_improves():
+    hw = FPGAModel()
+    layers = _layers()
+    small = incremental_dse(layers, hw, budget=64)
+    big = incremental_dse(layers, hw, budget=1024)
+    assert small.resource <= 64
+    assert big.resource <= 1024
+    assert big.throughput > small.throughput
+
+
+def test_dse_gives_sparse_layer_fewer_macs():
+    """Fig. 4: higher sparsity -> smaller MAC-per-SPE allocation for equal
+    throughput (the arbiter keeps fewer MACs busy)."""
+    hw = FPGAModel()
+    layers = [
+        LayerCost("dense", macs=65536, m_dot=256, weight_count=1, act_in=1,
+                  act_out=1, s_w=0.0),
+        LayerCost("sparse", macs=65536, m_dot=256, weight_count=1, act_in=1,
+                  act_out=1, s_w=0.75),
+    ]
+    r = incremental_dse(layers, hw, budget=512)
+    res = [hw.layer_resource(l, d) for l, d in zip(layers, r.designs)]
+    assert res[1] < res[0]
+    # rates stay balanced within 2x
+    rates = [hw.layer_throughput(l, d) for l, d in zip(layers, r.designs)]
+    assert max(rates) / min(rates) <= 4.0
+
+
+def test_dse_trace_is_monotone_in_resource():
+    hw = FPGAModel()
+    r = incremental_dse(_layers((0.2, 0.5, 0.0)), hw, budget=2048)
+    res = [t[0] for t in r.trace]
+    assert all(b >= a for a, b in zip(res, res[1:]))
+
+
+def test_resnet18_dse_end_to_end():
+    hw = FPGAModel()
+    layers = cnn_layer_costs(RESNET18)
+    r = incremental_dse(layers, hw, budget=12288, max_iters=2500)
+    assert 0 < r.resource <= 12288
+    imgs = r.throughput * hw.freq
+    assert imgs > 10          # sane scale for a dense U250-class budget
+
+
+def test_partitioning_tradeoff():
+    hw = FPGAModel()
+    layers = cnn_layer_costs(RESNET18)[:8]
+    one = partition_pipeline(layers, hw, budget=256, n_parts=1, batch=256,
+                             reconfig_cycles=1e6, dse_iters=100)
+    two = partition_pipeline(layers, hw, budget=256, n_parts=2, batch=256,
+                             reconfig_cycles=1e6, dse_iters=100)
+    assert one.time_per_batch > 0 and two.time_per_batch > 0
+    # with a huge reconfig cost, fewer partitions must win
+    expensive = partition_pipeline(layers, hw, budget=256, n_parts=2,
+                                   batch=256, reconfig_cycles=1e12,
+                                   dse_iters=60)
+    assert one.time_per_batch < expensive.time_per_batch

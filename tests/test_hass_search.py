@@ -1,0 +1,57 @@
+"""HASS end-to-end on a reduced ResNet-18 (the paper's Fig. 5 structure)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduce_config
+from repro.configs.paper_cnns import RESNET18
+from repro.core.hass import CNNEvaluator, Lambdas, hass_search
+from repro.core.perf_model import FPGAModel
+from repro.models import cnn
+
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def evaluator():
+    cfg = reduce_config(RESNET18)
+    params = cnn.init_params(cfg, RNG)
+    images = jax.random.normal(RNG, (8, cfg.img_res, cfg.img_res, 3))
+    return CNNEvaluator(cfg, params, images, FPGAModel(), budget=4096,
+                        dse_iters=400)
+
+
+def test_evaluator_metric_contract(evaluator):
+    m = evaluator(np.full(2 * len(evaluator.prunable), 0.4))
+    assert 0.0 <= m["acc"] <= 1.0
+    assert 0.0 <= m["spa"] <= 1.0
+    assert m["thr"] > 0 and m["dsp"] <= 1.0 + 1e-6
+
+
+def test_dense_proposal_gives_perfect_acc(evaluator):
+    m = evaluator(np.zeros(2 * len(evaluator.prunable)))
+    assert m["acc"] == 1.0
+    assert m["spa"] < 0.45          # only natural relu zeros
+
+
+def test_sparsity_increases_modeled_throughput(evaluator):
+    lo = evaluator(np.zeros(2 * len(evaluator.prunable)))
+    hi = evaluator(np.full(2 * len(evaluator.prunable), 0.7))
+    assert hi["thr"] > lo["thr"]
+
+
+def test_hw_aware_search_beats_software_only(evaluator):
+    """Fig. 5: at equal iteration budget, the hardware-aware objective finds
+    higher computation efficiency (throughput/resource)."""
+    kw = dict(iters=12, s_max=0.9, seed=0)
+    hw = hass_search(evaluator, len(evaluator.prunable),
+                     hardware_aware=True, **kw)
+    sw = hass_search(evaluator, len(evaluator.prunable),
+                     hardware_aware=False, **kw)
+    assert hw.best_metrics["eff"] >= sw.best_metrics["eff"]
+    # both retain usable accuracy proxies
+    assert hw.best_metrics["acc"] >= 0.5
+    assert len(hw.trials) == 12
+    # running_best is monotone in score
+    rb = hw.running_best("score")
+    assert all(b >= a - 1e-12 for a, b in zip(rb, rb[1:]))

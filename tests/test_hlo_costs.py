@@ -1,0 +1,111 @@
+"""Loop-aware HLO cost parser vs unrolled ground truth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_costs import analyze, parse_hlo, trip_count
+from repro.analysis.roofline import parse_collectives
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_scan_flops_scaled_by_trip_count():
+    def scan8(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, None, length=8)[0]
+
+    def unrolled(x, w):
+        for _ in range(8):
+            x = jnp.tanh(x @ w)
+        return x
+
+    xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    a = analyze(_compile(scan8, xs, ws).as_text())
+    truth = _compile(unrolled, xs, ws).cost_analysis()["flops"]
+    assert a.flops == pytest.approx(truth, rel=1e-6)
+    assert a.trip_counts == [8]
+
+
+def test_nested_scan():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _2):
+                return jnp.tanh(c2 @ w), None
+            return jax.lax.scan(inner, c, None, length=4)[0], None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    xs = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    a = analyze(_compile(g, xs, ws).as_text())
+    assert a.flops == pytest.approx(12 * 2 * 64 ** 3, rel=1e-6)
+    assert sorted(a.trip_counts) == [3, 4]
+
+
+def test_train_step_scan_equals_unrolled(monkeypatch):
+    """End-to-end: loop-aware parse of the scanned train step == parse of the
+    unrolled program (and both == dot-flops fraction of cost_analysis)."""
+    import dataclasses
+    from repro.configs import get_config, reduce_config
+    from repro.models import build_model
+    from repro.train.train_loop import TrainConfig, make_train_step, \
+        train_state_shape
+
+    cfg = dataclasses.replace(reduce_config(get_config("qwen3-0.6b")),
+                              num_layers=2)
+    api = build_model(cfg)
+    tcfg = TrainConfig(accum=2, remat="full")
+    ss = train_state_shape(api.init, tcfg)
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+    step = make_train_step(api.loss, tcfg)
+    a_scan = analyze(_compile(step, ss, batch).as_text())
+
+    monkeypatch.setenv("REPRO_UNROLL_SCANS", "1")
+    a_unr = analyze(_compile(step, ss, batch).as_text())
+    assert a_scan.flops == pytest.approx(a_unr.flops, rel=0.02)
+    assert 2 in a_scan.trip_counts and 2 in [t for t in a_scan.trip_counts]
+
+
+def test_collectives_scaled_by_loops():
+    """A psum inside a scan counts trip times."""
+    import subprocess, sys, os, textwrap
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.analysis.hlo_costs import analyze
+        mesh = jax.make_mesh((4,), ("d",))
+        def f(x, w):
+            def body(c, _):
+                y = c @ w                     # sharded contraction -> psum
+                return jnp.tanh(y), None
+            return jax.lax.scan(body, x, None, length=5)[0]
+        xs = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        ws = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        lowered = jax.jit(f, in_shardings=(
+            NamedSharding(mesh, P(None, "d")), NamedSharding(mesh, P("d", None)))
+        ).lower(xs, ws)
+        a = analyze(lowered.compile().as_text())
+        n_ar = sum(v for k, v in a.coll_by_op.items())
+        single = 64 * 64 * 4
+        assert n_ar >= 5 * single, (a.coll_by_op, a.trip_counts)
+        print("COLL-OK", a.coll_by_op)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=300)
+    assert "COLL-OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_parse_collectives_result_bytes():
+    txt = "  %ag = bf16[4,1024]{1,0} all-gather(%p), replica_groups=[4,2]<=[8]"
+    ops = parse_collectives(txt)
+    assert len(ops) == 1
+    assert ops[0].bytes == 4 * 1024 * 2
+    assert ops[0].group_size == 2

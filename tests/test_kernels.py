@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.block_sparse_matmul import build_tile_schedule
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 384, 256),
+                                   (100, 300, 200), (64, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_sparse_matmul_sweep(M, K, N, dtype):
+    x = jnp.asarray(RNG.normal(size=(M, K)), dtype)
+    w = RNG.normal(size=(K, N)).astype(np.float32)
+    # zero out random tiles entirely so skipping has something to skip
+    Kt, Nt = -(-K // 128), -(-N // 128)
+    for i in range(Kt):
+        for j in range(Nt):
+            if RNG.random() < 0.4:
+                w[i * 128:(i + 1) * 128, j * 128:(j + 1) * 128] = 0.0
+    w = jnp.asarray(w, dtype)
+    sw = ops.SparseWeight(w, bk=128, bn=128)
+    out = sw.matmul(x)
+    oracle = ref.block_sparse_matmul_ref(
+        jnp.asarray(x, jnp.float32), jnp.asarray(w, jnp.float32),
+        sw.mask, 128, 128)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-1
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               atol=tol, rtol=tol)
+
+
+def test_schedule_skips_zero_tiles():
+    """The static schedule is the paper's Eq.1 at tile granularity: grid steps
+    per output column == nnz tiles, not K/bk."""
+    mask = np.array([[1, 0], [0, 0], [1, 1]], dtype=bool)   # (Kt=3, Nt=2)
+    counts, indices = build_tile_schedule(mask)
+    assert counts.tolist() == [2, 1]
+    assert indices[0, :2].tolist() == [0, 2]
+    assert indices.shape[1] == 2                            # max_nnz, not Kt
+
+
+def test_masked_tiles_contribute_zero_even_if_weight_nonzero():
+    """Semantics: the kernel never loads masked tiles."""
+    x = jnp.ones((128, 256), jnp.float32)
+    w = np.ones((256, 128), np.float32)
+    mask = np.array([[True], [False]])                      # second K-tile off
+    counts, indices = build_tile_schedule(mask)
+    from repro.kernels.block_sparse_matmul import block_sparse_matmul
+    out = block_sparse_matmul(x, jnp.asarray(w), jnp.asarray(counts),
+                              jnp.asarray(indices), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 128.0)      # only 128 of 256
+
+
+@pytest.mark.parametrize("shape", [(64, 64), (100, 333), (7, 1024), (1, 9)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("tau", [0.0, 0.5, 2.0])
+def test_act_clip_sweep(shape, dtype, tau):
+    x = jnp.asarray(RNG.normal(size=shape), dtype)
+    y, cnt = ops.act_clip(x, tau)
+    y_ref, cnt_ref = ref.act_clip_count_ref(x, tau)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+    assert int(cnt) == int(cnt_ref)
+
+
+@settings(max_examples=15, deadline=None)
+@given(kt=st.integers(1, 4), nt=st.integers(1, 3),
+       density=st.floats(0.1, 1.0))
+def test_property_schedule_counts_match_mask(kt, nt, density):
+    mask = RNG.random((kt, nt)) < density
+    counts, indices = build_tile_schedule(mask)
+    assert (counts == mask.sum(0)).all()
+    for j in range(nt):
+        nz = np.nonzero(mask[:, j])[0]
+        assert indices[j, :len(nz)].tolist() == nz.tolist()
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 130), k=st.integers(1, 300), tau=st.floats(0, 3))
+def test_property_clip_idempotent_and_counts(m, k, tau):
+    x = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    y, cnt = ops.act_clip(x, tau)
+    y2, cnt2 = ops.act_clip(y, tau)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+    assert int(cnt) == int(cnt2) == int(np.sum(np.asarray(y) == 0.0))

@@ -1,0 +1,99 @@
+"""Eq. 1–3 of the paper, exactly, plus hypothesis properties."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perf_model import (DesignPoint, FPGAModel, LayerCost,
+                                   TPUModel, lm_layer_costs, cnn_layer_costs,
+                                   pair_sparsity, pipeline_throughput,
+                                   t_cycles, param_count)
+from repro.configs import get_config
+
+
+def test_eq1_dense():
+    # dense: t = ceil(M/N)
+    assert t_cycles(0.0, 64, 8) == 8
+    assert t_cycles(0.0, 64, 64) == 1
+    assert t_cycles(0.0, 65, 8) == 9
+
+
+def test_eq1_sparse_examples():
+    # 50% pair sparsity halves the initiation interval
+    assert t_cycles(0.5, 64, 8) == 4
+    # never below 1 cycle
+    assert t_cycles(0.99, 64, 64) == 1
+
+
+def test_pair_sparsity():
+    assert pair_sparsity(0.0, 0.0) == 0.0
+    assert pair_sparsity(1.0, 0.0) == 1.0
+    assert abs(pair_sparsity(0.5, 0.5) - 0.75) < 1e-12
+
+
+def test_eq2_eq3_pipeline_bottleneck():
+    hw = FPGAModel()
+    l1 = LayerCost("a", macs=1024, m_dot=64, weight_count=1024,
+                   act_in=16, act_out=16)
+    l2 = LayerCost("b", macs=4096, m_dot=64, weight_count=4096,
+                   act_in=16, act_out=16)
+    d = DesignPoint(spe=1, macs_per_spe=8)
+    th1 = hw.layer_throughput(l1, d)
+    th2 = hw.layer_throughput(l2, d)
+    assert th1 == pytest.approx(64 / (1024 * 8))
+    assert th2 < th1
+    assert pipeline_throughput([l1, l2], [d, d], hw) == th2   # Eq. 3 = min
+
+
+def test_sparsity_raises_throughput():
+    hw = FPGAModel()
+    dense = LayerCost("l", macs=4096, m_dot=64, weight_count=4096,
+                      act_in=1, act_out=1, s_w=0.0, s_a=0.0)
+    sparse = LayerCost("l", macs=4096, m_dot=64, weight_count=4096,
+                       act_in=1, act_out=1, s_w=0.5, s_a=0.5)
+    d = DesignPoint(spe=1, macs_per_spe=8)
+    assert hw.layer_throughput(sparse, d) > hw.layer_throughput(dense, d)
+
+
+def test_tpu_model_uses_tile_sparsity_only():
+    """DESIGN.md §6: MXU can only skip whole weight tiles."""
+    hw = TPUModel()
+    l = LayerCost("l", macs=4096, m_dot=64, weight_count=4096, act_in=1,
+                  act_out=1, s_w=0.9, s_a=0.9, s_w_tile=0.25)
+    assert hw.effective_sparsity(l) == 0.25
+
+
+@settings(max_examples=50, deadline=None)
+@given(s=st.floats(0, 0.99), M=st.integers(1, 4096), N=st.integers(1, 256))
+def test_property_eq1_bounds(s, M, N):
+    t = t_cycles(s, M, N)
+    assert 1 <= t <= math.ceil(M / N)
+    # monotone: more sparsity never raises t
+    assert t_cycles(min(0.99, s + 0.3), M, N) <= t
+
+
+@settings(max_examples=30, deadline=None)
+@given(sw=st.floats(0, 1), sa=st.floats(0, 1))
+def test_property_pair_sparsity_bounds(sw, sa):
+    p = pair_sparsity(sw, sa)
+    assert max(sw, sa) - 1e-12 <= p <= min(1.0, sw + sa) + 1e-12
+
+
+def test_resnet18_has_sixteen_3x3_convs():
+    """Fig. 4 of the paper: the ResNet-18 workload has 16 3x3 conv layers."""
+    from repro.configs.paper_cnns import RESNET18
+    costs = cnn_layer_costs(RESNET18)
+    n3x3 = sum(1 for c in costs
+               if c.kind == "conv" and c.m_dot % 9 == 0 and "proj" not in c.name
+               and c.name not in ("stem",))
+    assert n3x3 == 16
+
+
+def test_param_counts_in_expected_range():
+    """Sanity: the analytic parameter counts land near the model names."""
+    assert 60e9 < param_count(get_config("deepseek-67b")) < 75e9
+    assert 600e9 < param_count(get_config("deepseek-v3-671b")) < 750e9
+    assert 40e9 < param_count(get_config("mixtral-8x7b")) < 50e9
+    assert 0.4e9 < param_count(get_config("qwen3-0.6b")) < 0.9e9
+    assert 1.0e9 < param_count(get_config("rwkv6-1.6b")) < 2.2e9

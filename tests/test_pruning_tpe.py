@@ -1,0 +1,92 @@
+"""Magnitude pruning (§III) + TPE search properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pruning
+from repro.core.tpe import TPE
+
+RNG = np.random.default_rng(3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=st.floats(0.0, 0.95), n=st.integers(64, 2048))
+def test_property_achieved_sparsity_close_to_target(s, n):
+    w = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    w2 = pruning.prune_by_sparsity(w, s)
+    achieved = pruning.sparsity_of(w2)
+    assert abs(achieved - s) <= 2.0 / np.sqrt(n) + 0.02
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=st.floats(0.0, 0.9))
+def test_property_pruning_idempotent_and_monotone(s):
+    w = jnp.asarray(RNG.normal(size=(512,)), jnp.float32)
+    w1 = pruning.prune_by_sparsity(w, s)
+    w2 = pruning.prune_by_sparsity(w1, s)
+    assert pruning.sparsity_of(w2) >= pruning.sparsity_of(w1) - 1e-9
+    # more aggressive threshold ⇒ superset of zeros
+    w3 = pruning.prune_by_sparsity(w, min(0.95, s + 0.2))
+    zeros1 = np.asarray(w1) == 0
+    zeros3 = np.asarray(w3) == 0
+    assert np.all(zeros3 | ~zeros1 | zeros1 & zeros3)
+    assert zeros3.sum() >= zeros1.sum()
+
+
+def test_prune_params_per_layer_thresholds():
+    params = {"blocks": {"attn": {"wq": jnp.asarray(
+        RNG.normal(size=(3, 32, 32)), jnp.float32)}}}
+    # per-layer sparsity vector
+    out, achieved = pruning.prune_params(
+        params, {"blocks/attn/wq": np.array([0.0, 0.5, 0.9])})
+    w = np.asarray(out["blocks"]["attn"]["wq"])
+    per_layer = (w == 0).mean(axis=(1, 2))
+    assert per_layer[0] <= 0.02
+    assert abs(per_layer[1] - 0.5) < 0.1
+    assert abs(per_layer[2] - 0.9) < 0.1
+
+
+def test_tile_sparsity_counts_zero_tiles():
+    w = np.ones((256, 256), np.float32)
+    w[:128, :128] = 0.0
+    assert pruning.tile_sparsity(jnp.asarray(w), 128, 128) == pytest.approx(0.25)
+
+
+def test_default_prunable_paths():
+    assert pruning.default_prunable("blocks/attn/wq")
+    assert pruning.default_prunable("blocks/ffn/w_gate")
+    assert not pruning.default_prunable("blocks/ln1")
+    assert not pruning.default_prunable("embed")
+    assert not pruning.default_prunable("blocks/attn/q_norm")
+
+
+def test_gaussian_act_model_matches_empirical():
+    x = RNG.normal(size=200_000)
+    for tau in (0.1, 0.5, 1.0, 2.0):
+        pred = pruning.act_sparsity_gaussian(tau)
+        emp = float((np.abs(x) < tau).mean())
+        assert abs(pred - emp) < 0.01
+    # inverse
+    for s in (0.1, 0.5, 0.9):
+        tau = pruning.tau_for_act_sparsity(s)
+        assert abs(pruning.act_sparsity_gaussian(tau) - s) < 1e-6
+
+
+def test_tpe_beats_random_on_quadratic():
+    """TPE must beat equal-budget random search on average over seeds."""
+    def f(x):
+        return -np.sum((x - 0.3) ** 2)
+
+    lo, hi = np.zeros(4), np.ones(4)
+    tpe_scores, rand_scores = [], []
+    for seed in range(5):
+        tpe = TPE(lo=lo, hi=hi, seed=seed, n_startup=8)
+        for _ in range(60):
+            x = tpe.ask()
+            tpe.tell(x, f(x))
+        tpe_scores.append(tpe.best[1])
+        rng = np.random.default_rng(seed)
+        rand_scores.append(max(f(rng.uniform(lo, hi)) for _ in range(60)))
+    assert np.mean(tpe_scores) > np.mean(rand_scores)

@@ -1,0 +1,108 @@
+"""Training substrate: optimizer, grad accumulation, remat, state dtypes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.data.synthetic import lm_batch
+from repro.models import build_model
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, lr_at
+from repro.train.train_loop import (TrainConfig, init_train_state,
+                                    make_train_step)
+
+CFG = reduce_config(get_config("qwen3-0.6b"))
+RNG = jax.random.PRNGKey(0)
+
+
+def test_lr_schedule():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=110, min_lr_frac=0.1)
+    assert float(lr_at(oc, 0)) == 0.0
+    assert float(lr_at(oc, 10)) == pytest.approx(1.0, abs=1e-3)
+    assert float(lr_at(oc, 110)) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_loss_decreases_over_steps():
+    api = build_model(CFG)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=100),
+                       accum=1, remat=None)
+    state = init_train_state(api.init, tcfg, RNG)
+    step = jax.jit(make_train_step(api.loss, tcfg))
+    losses = []
+    for i in range(10):
+        state, m = step(state, lm_batch(CFG, 8, 32, seed=0, step=i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_grad_accum_matches_full_batch():
+    """accum=2 over batch 8 must equal accum=1 over the same batch 8."""
+    api = build_model(dataclasses.replace(CFG, dtype="float32"))
+    batch = lm_batch(CFG, 8, 32, seed=1, step=0)
+    t1 = TrainConfig(opt=OptConfig(lr=1e-3), accum=1, remat=None)
+    t2 = TrainConfig(opt=OptConfig(lr=1e-3), accum=2, remat=None)
+    s1 = init_train_state(api.init, t1, RNG)
+    s2 = init_train_state(api.init, t2, RNG)
+    s1, m1 = make_train_step(api.loss, t1)(s1, batch)
+    s2, m2 = make_train_step(api.loss, t2)(s2, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        s1["params"], s2["params"])
+    assert max(jax.tree_util.tree_leaves(d)) < 1e-5
+
+
+def test_remat_matches_no_remat():
+    api = build_model(dataclasses.replace(CFG, dtype="float32"))
+    batch = lm_batch(CFG, 4, 32, seed=2, step=0)
+    outs = []
+    for remat in (None, "full", "dots"):
+        t = TrainConfig(opt=OptConfig(lr=1e-3), accum=1, remat=remat)
+        s = init_train_state(api.init, t, RNG)
+        s, m = make_train_step(api.loss, t)(s, batch)
+        outs.append(float(m["loss"]))
+    assert outs[0] == pytest.approx(outs[1], rel=1e-6)
+    assert outs[0] == pytest.approx(outs[2], rel=1e-6)
+
+
+@pytest.mark.parametrize("sdtype", ["float32", "bfloat16", "int8"])
+def test_state_dtypes_train(sdtype):
+    api = build_model(CFG)
+    t = TrainConfig(opt=OptConfig(lr=1e-3, state_dtype=sdtype), accum=1,
+                    remat=None)
+    state = init_train_state(api.init, t, RNG)
+    step = jax.jit(make_train_step(api.loss, t))
+    l0 = None
+    for i in range(6):
+        state, m = step(state, lm_batch(CFG, 8, 32, seed=0, step=i))
+        l0 = l0 or float(m["loss"])
+    assert float(m["loss"]) < l0          # still trains
+
+
+def test_compressed_grads_numerics():
+    api = build_model(CFG)
+    t = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=100),
+                    accum=1, remat=None, compress_grads=True)
+    state = init_train_state(api.init, t, RNG)
+    assert "ef" in state
+    step = jax.jit(make_train_step(api.loss, t))
+    losses = []
+    for i in range(8):
+        state, m = step(state, lm_batch(CFG, 8, 32, seed=0, step=i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.2   # error feedback keeps training
+    ef_norm = sum(float(jnp.sum(jnp.abs(e)))
+                  for e in jax.tree_util.tree_leaves(state["ef"]))
+    assert ef_norm > 0                    # feedback is actually carrying error
+
+
+def test_weight_decay_mask_excludes_vectors():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    grads = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    oc = OptConfig(lr=1.0, weight_decay=0.1, warmup_steps=0, total_steps=10)
+    st = init_opt_state(params, oc)
+    p2, _, _ = adamw_update(params, grads, st, oc)
+    assert float(jnp.max(jnp.abs(p2["b"] - 1.0))) < 1e-6     # no decay on bias
+    assert float(jnp.max(jnp.abs(p2["w"] - 1.0))) > 1e-3     # decay on matrix
