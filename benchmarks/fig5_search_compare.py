@@ -16,7 +16,10 @@ from repro.core.perf_model import FPGAModel
 
 
 def run(iters: int = 16, img_res: int = 64, seed: int = 0,
-        budget: int = 12234):
+        budget: int = 12234, batch_size: int = 8):
+    """``batch_size``: TPE proposals evaluated per vmapped prune+forward
+    round (DESIGN.md §8); ``None``/0 falls back to the serial ask/tell loop.
+    """
     cfg = dataclasses.replace(RESNET18, img_res=img_res)
     params = trained_cnn(cfg, steps=20)
     images = jax.random.normal(jax.random.PRNGKey(seed),
@@ -26,12 +29,15 @@ def run(iters: int = 16, img_res: int = 64, seed: int = 0,
 
     def go(hardware_aware):
         return hass_search(ev, len(ev.prunable), iters=iters,
-                           hardware_aware=hardware_aware, seed=seed)
+                           hardware_aware=hardware_aware, seed=seed,
+                           batch_size=batch_size or None)
 
     hw_res, us_hw = timed(lambda: go(True))
     sw_res, us_sw = timed(lambda: go(False))
     payload = {
         "iters": iters,
+        "batch_size": batch_size,
+        "trials_per_s": 2 * iters / ((us_hw + us_sw) / 1e6),
         "hw_eff_curve": hw_res.running_best("eff"),
         "sw_eff_curve": sw_res.running_best("eff"),
         "hw_best": hw_res.best_metrics, "sw_best": sw_res.best_metrics,
@@ -40,7 +46,8 @@ def run(iters: int = 16, img_res: int = 64, seed: int = 0,
     gain = hw_res.best_metrics["eff"] / max(sw_res.best_metrics["eff"], 1e-9)
     emit("fig5.search_compare", us_hw + us_sw,
          f"hw_eff={hw_res.best_metrics['eff']:.1f} "
-         f"sw_eff={sw_res.best_metrics['eff']:.1f} gain={gain:.2f}x")
+         f"sw_eff={sw_res.best_metrics['eff']:.1f} gain={gain:.2f}x "
+         f"({payload['trials_per_s']:.2f} trials/s @ batch={batch_size})")
     return payload
 
 
@@ -48,5 +55,7 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=96)
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="proposals per vmapped evaluation round (0=serial)")
     args = ap.parse_args()
-    run(iters=args.iters)
+    run(iters=args.iters, batch_size=args.batch_size)

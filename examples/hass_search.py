@@ -15,11 +15,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=24)
     ap.add_argument("--img-res", type=int, default=64)
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="TPE proposals per vmapped evaluation round "
+                         "(0 = serial ask/tell loop)")
     args = ap.parse_args()
 
     from benchmarks.fig5_search_compare import run
-    payload = run(iters=args.iters, img_res=args.img_res)
+    payload = run(iters=args.iters, img_res=args.img_res,
+                  batch_size=args.batch_size)
     hw, sw = payload["hw_best"], payload["sw_best"]
+    print(f"\nsearch throughput: {payload['trials_per_s']:.2f} trials/s "
+          f"(batch={args.batch_size})")
     print(f"\nhardware-aware: eff={hw['eff']:.1f} acc={hw['acc']:.3f} "
           f"thr={hw['thr']:.0f} img/s dsp={hw['dsp']:.2f}")
     print(f"software-only : eff={sw['eff']:.1f} acc={sw['acc']:.3f} "

@@ -33,6 +33,26 @@ _COLL_RE = re.compile(
     r"collective-permute-start|all-reduce|all-gather|collective-permute)\(")
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns one dict; newer jax returns a list with one dict per
+    partition (length 1 for unsharded programs). Returns a single flat dict,
+    summing shared keys across partitions.
+    """
+    ca = compiled.cost_analysis() if callable(
+        getattr(compiled, "cost_analysis", None)) else compiled
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return dict(ca)
+    out: Dict[str, float] = {}
+    for part in ca:
+        for k, v in part.items():
+            out[k] = out.get(k, 0.0) + v
+    return out
+
+
 def _dims(s: str) -> List[int]:
     return [int(x) for x in s.split(",") if x] if s else []
 

@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.core.annealing import simulated_annealing
 from repro.core.perf_model import (DesignPoint, HardwareModel, LayerCost,
-                                   pipeline_throughput, t_cycles)
+                                   LayerVectors, pipeline_throughput,
+                                   t_cycles)
 
 
 @dataclass
@@ -44,20 +45,12 @@ def _grow_options(l: LayerCost, d: DesignPoint, hw: HardwareModel):
     return opts
 
 
-def rate_balance(layers: Sequence[LayerCost], designs: List[DesignPoint],
-                 hw: HardwareModel, *, protect: Optional[set] = None,
-                 strict: bool = False) -> List[DesignPoint]:
-    """Eq. 4–5: shrink every non-bottleneck layer to the smallest design whose
-    modeled throughput still meets the pipeline's actual rate theta_r.
-
-    ``strict=True`` is used *during* incrementing: a shrink must leave the
-    layer's rate strictly above theta_r. With the literal (non-strict) Eq. 4
-    rule, growing one of several bottleneck-tied layers gets undone by the
-    next balancing pass (rate lands exactly on theta_r and is "still
-    feasible"), deadlocking the greedy loop. Strict balancing keeps every
-    layer within (theta_r, 2*theta_r] during growth; the final non-strict pass
-    reclaims the leftover, which is the paper's Eq. 4 verbatim.
-    ``protect`` exempts the just-grown layer."""
+def rate_balance_ref(layers: Sequence[LayerCost], designs: List[DesignPoint],
+                     hw: HardwareModel, *, protect: Optional[set] = None,
+                     strict: bool = False) -> List[DesignPoint]:
+    """Reference (scalar, per-layer-loop) Eq. 4–5 implementation. Kept
+    verbatim for equivalence testing against the vectorized ``rate_balance``;
+    see that function for the semantics."""
     protect = protect or set()
     theta_r = pipeline_throughput(layers, designs, hw)
     lo = theta_r * (1 + 1e-9) if strict else theta_r * (1 - 1e-12)
@@ -82,9 +75,211 @@ def rate_balance(layers: Sequence[LayerCost], designs: List[DesignPoint],
     return balanced
 
 
+# --------------------------------------------------------------------- #
+# Vectorized engine (DESIGN.md §7): the design state is two small int
+# vectors (spe, macs_per_spe) — designs only ever double/halve — operated
+# on as flat arrays instead of per-layer dataclass lists.
+# --------------------------------------------------------------------- #
+def _design_arrays(designs: Sequence[DesignPoint]):
+    spe = np.array([d.spe for d in designs], dtype=np.int64)
+    n = np.array([d.macs_per_spe for d in designs], dtype=np.int64)
+    return spe, n
+
+
+def _designs_from(spe: np.ndarray, n: np.ndarray) -> List[DesignPoint]:
+    return [DesignPoint(int(s), int(m)) for s, m in zip(spe, n)]
+
+
+def _balance_arrays(hw: HardwareModel, lv: LayerVectors, spe: np.ndarray,
+                    n: np.ndarray, protect: np.ndarray, strict: bool):
+    """Vectorized Eq. 4–5 core. Each round, every unprotected layer takes its
+    preferred feasible halving (macs_per_spe first, else spe — the reference
+    candidate order) simultaneously; rounds repeat until no layer can shrink.
+    Per-layer decisions are independent (theta_r is fixed at entry), so the
+    simultaneous rounds replay each layer's reference shrink sequence exactly.
+    """
+    theta_r = float(hw.throughput_vec(lv, spe, n).min())
+    lo = theta_r * (1 + 1e-9) if strict else theta_r * (1 - 1e-12)
+    spe, n = spe.copy(), n.copy()
+    free = ~protect
+    while True:
+        cand_n = np.maximum(1, n >> 1)
+        ok_n = free & (cand_n != n) & \
+            (hw.throughput_vec(lv, spe, cand_n) >= lo)
+        cand_s = np.maximum(1, spe >> 1)
+        ok_s = free & ~ok_n & (cand_s != spe) & \
+            (hw.throughput_vec(lv, cand_s, n) >= lo)
+        if not (ok_n.any() or ok_s.any()):
+            return spe, n
+        n = np.where(ok_n, cand_n, n)
+        spe = np.where(ok_s, cand_s, spe)
+
+
+def rate_balance(layers: Sequence[LayerCost], designs: List[DesignPoint],
+                 hw: HardwareModel, *, protect: Optional[set] = None,
+                 strict: bool = False) -> List[DesignPoint]:
+    """Eq. 4–5: shrink every non-bottleneck layer to the smallest design whose
+    modeled throughput still meets the pipeline's actual rate theta_r.
+
+    ``strict=True`` is used *during* incrementing: a shrink must leave the
+    layer's rate strictly above theta_r. With the literal (non-strict) Eq. 4
+    rule, growing one of several bottleneck-tied layers gets undone by the
+    next balancing pass (rate lands exactly on theta_r and is "still
+    feasible"), deadlocking the greedy loop. Strict balancing keeps every
+    layer within (theta_r, 2*theta_r] during growth; the final non-strict pass
+    reclaims the leftover, which is the paper's Eq. 4 verbatim.
+    ``protect`` exempts the just-grown layer.
+
+    Vectorized; equivalent to ``rate_balance_ref`` design-for-design."""
+    mask = np.zeros(len(designs), dtype=bool)
+    for i in (protect or ()):
+        mask[i] = True
+    spe, n = _design_arrays(designs)
+    spe, n = _balance_arrays(hw, hw.layer_vectors(layers), spe, n, mask,
+                             strict)
+    return _designs_from(spe, n)
+
+
+def _run_incremental(lv: LayerVectors, hw: HardwareModel, budget: float,
+                     max_iters: int):
+    """Array-native §V-A.3 greedy loop; returns (spe, n, thr, res, trace).
+
+    The state is two int vectors plus three maintained rate vectors: each
+    layer's current rate (Eq. 2) and its rate after one macs_per_spe / one
+    spe halving. Per iteration the engine does O(L) flat scans (argmin,
+    shrink-feasibility) and re-derives rates only for the 1–2 layers that
+    actually change, with the identical scalar expressions the reference
+    evaluates — so results match ``incremental_dse_ref`` bit for bit while
+    skipping its O(L * shrink-tries) dataclass churn and throughput
+    recomputation.
+    """
+    L = len(lv)
+    macs = lv.macs.tolist()
+    m_dot = lv.m_dot.tolist()
+    s_eff = lv.s_eff.tolist()
+    max_n = lv.max_n.tolist()
+    max_spe = lv.max_spe.tolist()
+    unit = lv.res_unit.tolist()
+    spe = [1] * L
+    n = [1] * L
+    # maintained per-layer rates: current (Eq. 2) and after one halving of
+    # each coordinate — flat float lists; O(L) scans at Python-scalar cost
+    # beat numpy-reduction dispatch for every realistic pipeline depth
+    thr = [0.0] * L
+    thr_nh = [0.0] * L
+    thr_sh = [0.0] * L
+
+    def thr_of(i: int, s: int, nn: int) -> float:
+        if not macs[i]:
+            return float("inf")
+        t = t_cycles(s_eff[i], m_dot[i], nn)
+        return s * m_dot[i] / (macs[i] * t)
+
+    def sync(i: int) -> None:
+        thr[i] = thr_of(i, spe[i], n[i])
+        thr_nh[i] = thr_of(i, spe[i], max(1, n[i] // 2))
+        thr_sh[i] = thr_of(i, max(1, spe[i] // 2), n[i])
+
+    for i in range(L):
+        sync(i)
+    # resource totals are exact (integer DSPs / dyadic tile-lane fractions),
+    # so incremental updates equal the reference's full re-summation
+    res_total = float(sum(unit))
+
+    def balance(lo: float, skip) -> List[Tuple[int, int, int]]:
+        """One Eq. 4–5 pass against fixed ``lo``. ``skip`` is a protected
+        layer index or per-layer bool list. Returns [(i, old_spe, old_n)] of
+        changed layers. A layer shrinks at all iff its first halving is
+        feasible, and each shrink chain is n-halvings then spe-halvings (rate
+        is monotone in both coordinates, so the reference's retry-n-first
+        loop reduces to exactly this), in scalar exact arithmetic."""
+        nonlocal res_total
+        changed = []
+        skip_is_idx = isinstance(skip, int)
+        for i in range(L):
+            if (skip[i] if not skip_is_idx else i == skip):
+                continue
+            if not ((n[i] > 1 and thr_nh[i] >= lo) or
+                    (spe[i] > 1 and thr_sh[i] >= lo)):
+                continue
+            s_i, n_i = spe[i], n[i]
+            changed.append((i, s_i, n_i))
+            while True:
+                if n_i > 1 and thr_of(i, s_i, n_i // 2) >= lo:
+                    n_i //= 2
+                    continue
+                if s_i > 1 and thr_of(i, s_i // 2, n_i) >= lo:
+                    s_i //= 2
+                    continue
+                break
+            res_total += (s_i * n_i - spe[i] * n[i]) * unit[i]
+            spe[i], n[i] = s_i, n_i
+            sync(i)
+        return changed
+
+    trace: List[Tuple[float, float]] = []
+    for _ in range(max_iters):
+        cur_thr = min(thr)
+        slow = thr.index(cur_thr)
+        trace.append((res_total, cur_thr))
+        # candidate increments for the slowest layer (macs_per_spe doubling
+        # first — the reference option order, which wins Δthr/Δres ties)
+        cur_res = spe[slow] * n[slow] * unit[slow]
+        best = None
+        best_score = None
+        if n[slow] < max_n[slow]:
+            n2 = min(n[slow] * 2, max_n[slow])
+            dres = spe[slow] * n2 * unit[slow] - cur_res
+            best = (spe[slow], n2)
+            best_score = (thr_of(slow, spe[slow], n2) - cur_thr) / \
+                max(dres, 1e-9)
+        if spe[slow] < max_spe[slow]:
+            s2 = min(spe[slow] * 2, max_spe[slow])
+            dres = s2 * n[slow] * unit[slow] - cur_res
+            score = (thr_of(slow, s2, n[slow]) - cur_thr) / max(dres, 1e-9)
+            if best is None or score > best_score:
+                best, best_score = (s2, n[slow]), score
+        if best is None:
+            break
+        # apply the growth, strict-balance everyone else, keep if affordable
+        res_before = res_total
+        old_slow = (slow, spe[slow], n[slow])
+        res_total += (best[0] * best[1] - spe[slow] * n[slow]) * unit[slow]
+        spe[slow], n[slow] = best
+        sync(slow)
+        changed = balance(min(thr) * (1 + 1e-9), skip=slow)
+        if res_total > budget:
+            for i, s_i, n_i in [old_slow] + changed:
+                spe[i], n[i] = s_i, n_i
+                sync(i)
+            res_total = res_before
+            break
+
+    # final literal Eq. 4 pass: trim over-provision, keep the bottleneck set
+    theta_r = min(thr)
+    hi = theta_r * (1 + 1e-9)
+    balance(theta_r * (1 - 1e-12), skip=[r <= hi for r in thr])
+    return (np.array(spe, dtype=np.int64), np.array(n, dtype=np.int64),
+            min(thr), res_total, trace)
+
+
 def incremental_dse(layers: Sequence[LayerCost], hw: HardwareModel,
                     budget: float, *, max_iters: int = 10000) -> DSEResult:
-    """§V-A.3: start resource-minimal, grow the slowest layer, re-balance."""
+    """§V-A.3: start resource-minimal, grow the slowest layer, re-balance.
+
+    Vectorized greedy loop — identical designs/throughput/resource/trace to
+    ``incremental_dse_ref`` (property-tested), ~10–100x faster."""
+    lv = hw.layer_vectors(layers)
+    spe, n, thr, res, trace = _run_incremental(lv, hw, budget, max_iters)
+    return DSEResult(designs=_designs_from(spe, n), throughput=thr,
+                     resource=res, throughput_per_res=thr / max(res, 1e-9),
+                     trace=trace)
+
+
+def incremental_dse_ref(layers: Sequence[LayerCost], hw: HardwareModel,
+                        budget: float, *, max_iters: int = 10000) -> DSEResult:
+    """Reference scalar implementation of ``incremental_dse`` (pre-vectorized
+    code, kept verbatim as the equivalence oracle and for ``dse_bench``)."""
     designs = [DesignPoint(1, 1) for _ in layers]
     trace: List[Tuple[float, float]] = []
 
@@ -110,7 +305,7 @@ def incremental_dse(layers: Sequence[LayerCost], hw: HardwareModel,
         opt = max(opts, key=score)
         cand = list(designs)
         cand[slow] = opt
-        cand = rate_balance(layers, cand, hw, protect={slow}, strict=True)
+        cand = rate_balance_ref(layers, cand, hw, protect={slow}, strict=True)
         if total_res(cand) > budget:
             break
         designs = cand
@@ -118,7 +313,7 @@ def incremental_dse(layers: Sequence[LayerCost], hw: HardwareModel,
     # final literal Eq. 4 pass: trim over-provision, keep the bottleneck set
     rates = [hw.layer_throughput(l, d) for l, d in zip(layers, designs)]
     bottleneck = {i for i, r in enumerate(rates) if r <= min(rates) * (1 + 1e-9)}
-    designs = rate_balance(layers, designs, hw, protect=bottleneck)
+    designs = rate_balance_ref(layers, designs, hw, protect=bottleneck)
     thr = pipeline_throughput(layers, designs, hw)
     res = total_res(designs)
     return DSEResult(designs=designs, throughput=thr, resource=res,

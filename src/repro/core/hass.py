@@ -67,7 +67,8 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
                 hardware_aware: bool = True,
                 lambdas: Lambdas = Lambdas(),
                 s_max: float = 0.95, seed: int = 0,
-                include_act: bool = True) -> SearchResult:
+                include_act: bool = True,
+                batch_size: Optional[int] = None) -> SearchResult:
     """Search per-layer sparsity targets.
 
     evaluate(x) must return a dict with keys:
@@ -76,22 +77,50 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
       thr   >0       — modeled throughput (samples/s), normalized by caller
       dsp   >0       — resource utilization fraction in [0,1]
     x layout: [s_w_0..s_w_{L-1}] (+ [s_a_0..s_a_{L-1}] when include_act).
+
+    ``batch_size`` switches to the batched frontier (DESIGN.md §8): each
+    round asks the TPE for a batch of proposals and scores them through
+    ``evaluate.evaluate_batch(xs)`` when the evaluator provides it (one
+    vmapped prune+forward instead of one jit call per trial), falling back
+    to per-proposal ``evaluate(x)``. Size-1 rounds always use plain
+    ``evaluate`` — vmap-of-1 and jit numerics may differ in the last float
+    bits — so ``batch_size=1`` replays the serial search trial-for-trial at
+    a fixed seed for ANY evaluator; ``None`` keeps the serial loop.
     """
     dim = n_layers * (2 if include_act else 1)
     opt = TPE(lo=np.zeros(dim), hi=np.full(dim, s_max), seed=seed)
     result = SearchResult(best_x=np.zeros(dim), best_score=-np.inf,
                           best_metrics={})
-    for it in range(iters):
-        x = opt.ask()
-        m = dict(evaluate(x))
+
+    def record(x: np.ndarray, m: Dict[str, float]) -> float:
         score = m["acc"] + lambdas.spa * m["spa"]
         if hardware_aware:
             score += lambdas.thr * m["thr_norm"] - lambdas.dsp * m["dsp"]
         m["score"] = score
-        opt.tell(x, score)
         result.trials.append(Trial(x=x, score=score, metrics=m))
         if score > result.best_score:
             result.best_score, result.best_x, result.best_metrics = score, x, m
+        return score
+
+    if batch_size is None:
+        for it in range(iters):
+            x = opt.ask()
+            m = dict(evaluate(x))
+            opt.tell(x, record(x, m))
+        return result
+
+    if batch_size < 1:
+        raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+    eval_batch = getattr(evaluate, "evaluate_batch", None)
+    done = 0
+    while done < iters:
+        k = min(batch_size, iters - done)
+        xs = opt.ask_batch(k)
+        ms = [dict(m) for m in eval_batch(xs)] \
+            if eval_batch is not None and k > 1 \
+            else [dict(evaluate(x)) for x in xs]
+        opt.tell_batch(xs, [record(x, m) for x, m in zip(xs, ms)])
+        done += k
     return result
 
 
@@ -152,6 +181,9 @@ class CNNEvaluator:
             return acc, jnp.stack(achieved), s_a_meas
 
         self._eval = jax.jit(_eval)
+        # batched frontier: one vmapped prune+forward for a whole batch of
+        # proposals (compiled once per batch shape) instead of B jit calls
+        self._eval_batch = jax.jit(jax.vmap(_eval, in_axes=(None, 0, 0)))
 
     def _collect_act_samples(self) -> Dict[str, np.ndarray]:
         """|activation| quantiles at each prunable layer's input (dense run):
@@ -171,14 +203,16 @@ class CNNEvaluator:
             last = s.name
         return samples
 
-    def __call__(self, x: np.ndarray) -> Dict[str, float]:
+    def _split(self, x: np.ndarray):
         L = len(self.prunable)
         s_w = jnp.asarray(x[:L])
         s_a = jnp.asarray(x[L:2 * L]) if len(x) >= 2 * L else jnp.zeros(L)
-        # 1-2) one-shot prune + accuracy proxy + measured act sparsity (jitted)
-        acc, sw_meas, sa_meas = map(np.asarray,
-                                    self._eval(self.params, s_w, s_a))
-        # 3) per-layer sparsity -> perf model (Eq. 1-3) -> DSE
+        return s_w, s_a
+
+    def _metrics(self, acc: float, sw_meas: np.ndarray,
+                 sa_meas: np.ndarray) -> Dict[str, float]:
+        """Measured per-layer sparsity -> perf model (Eq. 1-3) -> DSE ->
+        the Eq. 6 metric dict."""
         layers = []
         spa_num = spa_den = 0.0
         i = 0
@@ -197,9 +231,30 @@ class CNNEvaluator:
         # log-compressed speedup: Eq. 6's lambda-normalization heuristic keeps
         # the hardware terms commensurate with acc in [0, 1]
         thr_norm = float(np.log2(1.0 + thr / max(self.dense_thr, 1e-9)) / 4.0)
-        return {"acc": float(acc),
+        return {"acc": acc,
                 "spa": spa_num / max(spa_den, 1e-9),
                 "thr": thr,
                 "thr_norm": thr_norm,
                 "dsp": dse.resource / max(self.budget, 1e-9),
                 "eff": thr / max(dse.resource, 1e-9)}
+
+    def __call__(self, x: np.ndarray) -> Dict[str, float]:
+        # 1-2) one-shot prune + accuracy proxy + measured act sparsity (jitted)
+        s_w, s_a = self._split(x)
+        acc, sw_meas, sa_meas = map(np.asarray,
+                                    self._eval(self.params, s_w, s_a))
+        return self._metrics(float(acc), sw_meas, sa_meas)
+
+    def evaluate_batch(self, xs: Sequence[np.ndarray]) -> List[Dict[str, float]]:
+        """Score a batch of proposals with ONE vmapped prune+forward call;
+        the (fast, vectorized) DSE then runs per proposal on the measured
+        sparsities. Feeds ``hass_search(batch_size=...)``."""
+        if len(xs) == 0:
+            return []
+        split = [self._split(x) for x in xs]
+        s_w = jnp.stack([s for s, _ in split])
+        s_a = jnp.stack([a for _, a in split])
+        accs, sw_meas, sa_meas = map(
+            np.asarray, self._eval_batch(self.params, s_w, s_a))
+        return [self._metrics(float(accs[b]), sw_meas[b], sa_meas[b])
+                for b in range(len(xs))]

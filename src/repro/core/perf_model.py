@@ -25,6 +25,8 @@ import math
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
 from repro.configs.base import ModelConfig, ShapeConfig
 
 # ---------------------------------------------------------------------- #
@@ -83,6 +85,24 @@ class DesignPoint:
 
 
 @dataclass
+class LayerVectors:
+    """Per-layer workload constants as flat arrays — the vectorized DSE's
+    view of a pipeline. Design state lives outside this struct as two int
+    arrays (spe, macs_per_spe); designs only ever double/halve, so the whole
+    search state is those two small vectors (DESIGN.md §7).
+    """
+    macs: np.ndarray        # (L,) int64 — C_l
+    m_dot: np.ndarray       # (L,) int64 — M
+    s_eff: np.ndarray       # (L,) float64 — hardware-effective S̄
+    max_n: np.ndarray       # (L,) int64
+    max_spe: np.ndarray     # (L,) int64
+    res_unit: np.ndarray    # (L,) float64 — resource per (spe * macs_per_spe)
+
+    def __len__(self) -> int:
+        return len(self.macs)
+
+
+@dataclass
 class HardwareModel:
     freq: float = 250e6
 
@@ -102,6 +122,40 @@ class HardwareModel:
 
     def max_spe(self, l: LayerCost) -> int:
         return max(1, l.macs // max(l.m_dot, 1))
+
+    # ------------------------------------------------------------------ #
+    # Vectorized API (the DSE hot path operates on these; DESIGN.md §7)
+    # ------------------------------------------------------------------ #
+    def layer_vectors(self, layers: Sequence[LayerCost]) -> LayerVectors:
+        """Freeze a pipeline's workload constants into arrays. ``res_unit``
+        is derived from ``layer_resource`` at the unit design, so any model
+        whose resource is proportional to spe*macs_per_spe (both backends
+        here) stays consistent with the scalar API by construction."""
+        unit = DesignPoint(1, 1)
+        return LayerVectors(
+            macs=np.array([l.macs for l in layers], dtype=np.int64),
+            m_dot=np.array([l.m_dot for l in layers], dtype=np.int64),
+            s_eff=np.array([self.effective_sparsity(l) for l in layers],
+                           dtype=np.float64),
+            max_n=np.array([self.max_n(l) for l in layers], dtype=np.int64),
+            max_spe=np.array([self.max_spe(l) for l in layers],
+                             dtype=np.int64),
+            res_unit=np.array([self.layer_resource(l, unit) for l in layers],
+                              dtype=np.float64))
+
+    def throughput_vec(self, lv: LayerVectors, spe: np.ndarray,
+                       n: np.ndarray) -> np.ndarray:
+        """Eq. 1–2 over all layers at once; float-for-float identical to
+        ``layer_throughput`` (same operation order, products < 2**53)."""
+        t = np.maximum(1.0, np.ceil((1.0 - lv.s_eff) * lv.m_dot
+                                    / np.maximum(n, 1)))
+        with np.errstate(divide="ignore"):
+            thr = (spe * lv.m_dot) / (lv.macs * t)
+        return np.where(lv.macs > 0, thr, np.inf)
+
+    def resource_vec(self, lv: LayerVectors, spe: np.ndarray,
+                     n: np.ndarray) -> np.ndarray:
+        return spe * n * lv.res_unit
 
 
 @dataclass

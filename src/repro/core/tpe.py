@@ -9,7 +9,7 @@ among ``n_ei`` samples drawn from l.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -35,9 +35,10 @@ class TPE:
         return len(self.lo)
 
     # -------------------------------------------------------------- #
-    def ask(self) -> np.ndarray:
-        if len(self.xs) < self.n_startup:
-            return self._rng.uniform(self.lo, self.hi)
+    def _fit(self):
+        """Split observations at the γ-quantile and fit both Parzen densities
+        (points + bandwidths). Pure function of (xs, ys) — no RNG use — so a
+        batch of asks can share one fit."""
         X = np.stack(self.xs)
         y = np.asarray(self.ys)
         n_good = max(1, int(np.ceil(self.gamma * len(y))))
@@ -45,13 +46,44 @@ class TPE:
         good, bad = X[order[:n_good]], X[order[n_good:]]
         if len(bad) == 0:
             bad = X
-        cand = self._sample_parzen(good, self.n_ei)
-        score = self._log_kde(cand, good) - self._log_kde(cand, bad)
+        return good, self._bw(good), bad, self._bw(bad)
+
+    def _propose(self, fit) -> np.ndarray:
+        good, bw_good, bad, bw_bad = fit
+        cand = self._sample_parzen(good, bw_good, self.n_ei)
+        score = self._log_kde(cand, good, bw_good) - \
+            self._log_kde(cand, bad, bw_bad)
         return cand[int(np.argmax(score))]
+
+    def ask(self) -> np.ndarray:
+        if len(self.xs) < self.n_startup:
+            return self._rng.uniform(self.lo, self.hi)
+        return self._propose(self._fit())
+
+    def ask_batch(self, k: int) -> List[np.ndarray]:
+        """k proposals without intermediate tells. Candidates are independent
+        draws from the current l(x)/g(x) model (random-restart parallel TPE)
+        sharing ONE model fit (the fit consumes no RNG and xs/ys don't change
+        inside a batch): each draw advances the RNG, so the batch is diverse,
+        and ask_batch(1) is bit-identical to a single ask() — the serial
+        search is the batch_size=1 special case (DESIGN.md §8)."""
+        if len(self.xs) < self.n_startup:
+            return [self._rng.uniform(self.lo, self.hi) for _ in range(k)]
+        fit = self._fit()
+        return [self._propose(fit) for _ in range(k)]
 
     def tell(self, x: np.ndarray, y: float) -> None:
         self.xs.append(np.asarray(x, float))
         self.ys.append(float(y))
+
+    def tell_batch(self, xs: Sequence[np.ndarray],
+                   ys: Sequence[float]) -> None:
+        """Record a batch of observations in proposal order (so a fixed-seed
+        batched run replays the serial trial sequence)."""
+        if len(xs) != len(ys):
+            raise ValueError(f"got {len(xs)} proposals but {len(ys)} scores")
+        for x, y in zip(xs, ys):
+            self.tell(x, y)
 
     @property
     def best(self) -> Tuple[np.ndarray, float]:
@@ -77,8 +109,8 @@ class TPE:
             bws[order, d] = bw_sorted
         return np.clip(bws, 0.02 * span, 0.7 * span)
 
-    def _sample_parzen(self, pts: np.ndarray, n: int) -> np.ndarray:
-        bw = self._bw(pts)                              # (m, D)
+    def _sample_parzen(self, pts: np.ndarray, bw: np.ndarray,
+                       n: int) -> np.ndarray:
         idx = self._rng.integers(len(pts), size=n)
         samp = pts[idx] + self._rng.normal(size=(n, self.dim)) * bw[idx]
         # uniform-prior component: 20% of candidates explore globally
@@ -87,8 +119,8 @@ class TPE:
                                            size=(n_prior, self.dim))
         return np.clip(samp, self.lo, self.hi)
 
-    def _log_kde(self, x: np.ndarray, pts: np.ndarray) -> np.ndarray:
-        bw = self._bw(pts)                              # (m, D)
+    def _log_kde(self, x: np.ndarray, pts: np.ndarray,
+                 bw: np.ndarray) -> np.ndarray:
         d = (x[:, None, :] - pts[None, :, :]) / bw[None]      # (n, m, D)
         log_comp = -0.5 * np.sum(d * d, axis=-1) - \
             np.sum(np.log(bw), axis=-1)[None]

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _kernel(x_ref, tau_ref, y_ref, cnt_ref):
     x = x_ref[...]
@@ -52,7 +54,7 @@ def act_clip_count(x: jnp.ndarray, tau, *, bm: int = 256, bn: int = 256,
             jax.ShapeDtypeStruct((M, N), x.dtype),
             jax.ShapeDtypeStruct((M // bm, N // bn), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x, tau_arr)

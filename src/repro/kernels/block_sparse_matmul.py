@@ -24,6 +24,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def build_tile_schedule(mask: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """mask: (Kt, Nt) bool -> (counts (Nt,), indices (Nt, max_nnz)) int32.
@@ -97,7 +99,7 @@ def block_sparse_matmul(x: jnp.ndarray, w: jnp.ndarray,
             out_specs=pl.BlockSpec((bm, bn), o_map),
         ),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(counts, indices, x, w)

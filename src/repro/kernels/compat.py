@@ -1,0 +1,20 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and back,
+depending on the release line); the kernels in this package only ever pass
+``dimension_semantics``, so a single factory hides the drift.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams", None)
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the installed jax's TPU compiler-params object (or None if the
+    class is absent entirely — pallas_call accepts compiler_params=None)."""
+    if _COMPILER_PARAMS_CLS is None:
+        return None
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -255,7 +255,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        from repro.analysis.hlo_costs import cost_analysis_dict
+        cost = cost_analysis_dict(compiled)
         print(f"[dryrun] {key} memory_analysis: {mem}")
         print(f"[dryrun] {key} cost_analysis: "
               f"flops={cost.get('flops')} bytes={cost.get('bytes accessed')}")

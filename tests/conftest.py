@@ -6,3 +6,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # Tests must see the single real CPU device (the dry-run sets its own flags
 # in a separate process). Keep XLA quiet and deterministic.
 os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+# Containers without hypothesis fall back to the fixed-seed stub so property
+# tests still collect and run; test modules just `from hypothesis import ...`.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies

@@ -33,11 +33,16 @@ def _teacher(cfg, params, tokens, frames=None):
     return tfm.lm_forward(cfg, params, tokens, frames=frames)[1]
 
 
+slow = pytest.mark.slow       # heaviest prefill/decode compiles
+
+
 @pytest.mark.parametrize("arch,tol", [
     ("qwen3-0.6b", 1e-4), ("qwen2.5-3b", 1e-4), ("stablelm-12b", 1e-4),
     ("chameleon-34b", 1e-4), ("deepseek-67b", 1e-4),
-    ("deepseek-v3-671b", 1e-4), ("mixtral-8x7b", 1e-4),
-    ("rwkv6-1.6b", 1e-4), ("zamba2-1.2b", 5e-4), ("whisper-base", 1e-4),
+    pytest.param("deepseek-v3-671b", 1e-4, marks=slow),
+    ("mixtral-8x7b", 1e-4), ("rwkv6-1.6b", 1e-4),
+    pytest.param("zamba2-1.2b", 5e-4, marks=slow),
+    pytest.param("whisper-base", 1e-4, marks=slow),
 ])
 def test_decode_matches_teacher_forcing(arch, tol):
     cfg = _f32(reduce_config(get_config(arch)))
@@ -60,6 +65,7 @@ def test_decode_matches_teacher_forcing(arch, tol):
     assert max(errs) <= tol * max(scale, 1.0), f"{arch}: {errs}"
 
 
+@pytest.mark.slow
 def test_swa_ring_buffer_beyond_window():
     """Mixtral-style SWA: decode far past the window stays consistent."""
     cfg = _f32(reduce_config(get_config("mixtral-8x7b")))   # window 8

@@ -1,0 +1,101 @@
+"""Vectorized DSE engine == scalar reference, exactly.
+
+The vectorized ``incremental_dse`` / ``rate_balance`` must reproduce the
+reference implementations bit for bit (designs, throughput, resource, trace)
+across both hardware backends and randomized layer stacks — the contract that
+makes the 10x+ speedup (benchmarks/dse_bench.py) a pure refactor.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnns import MOBILENETV3S, RESNET18
+from repro.core.dse import (incremental_dse, incremental_dse_ref,
+                            rate_balance, rate_balance_ref)
+from repro.core.perf_model import (DesignPoint, FPGAModel, LayerCost,
+                                   TPUModel, cnn_layer_costs)
+
+HW = [(FPGAModel(), 12288.0), (TPUModel(), TPUModel().budget)]
+
+
+def _random_stack(rng, L):
+    return [LayerCost(f"l{i}", macs=int(rng.integers(0, 10 ** 7)),
+                      m_dot=int(rng.integers(1, 4096)),
+                      weight_count=1, act_in=1, act_out=1,
+                      s_w=float(rng.uniform(0, 1.0)),
+                      s_a=float(rng.uniform(0, 0.9)),
+                      s_w_tile=float(rng.uniform(0, 0.5)),
+                      prunable=bool(rng.integers(2)))
+            for i in range(L)]
+
+
+def _assert_same(a, b):
+    assert a.designs == b.designs
+    assert a.throughput == b.throughput
+    assert a.resource == b.resource
+    assert a.trace == b.trace
+
+
+@pytest.mark.parametrize("hw,budget", HW, ids=["fpga", "tpu"])
+def test_incremental_dse_matches_ref_on_paper_cnn(hw, budget):
+    rng = np.random.default_rng(0)
+    layers = cnn_layer_costs(RESNET18)
+    for l in layers:
+        l.s_w = float(rng.uniform(0.1, 0.8))
+        l.s_a = float(rng.uniform(0.1, 0.6))
+        l.s_w_tile = float(rng.uniform(0.0, 0.4))
+    _assert_same(incremental_dse(layers, hw, budget, max_iters=500),
+                 incremental_dse_ref(layers, hw, budget, max_iters=500))
+
+
+@pytest.mark.parametrize("hw,budget", HW, ids=["fpga", "tpu"])
+def test_incremental_dse_matches_ref_randomized(hw, budget):
+    rng = np.random.default_rng(42)
+    for trial in range(12):
+        layers = _random_stack(rng, int(rng.integers(1, 24)))
+        b = float(rng.integers(1, int(budget)))
+        _assert_same(incremental_dse(layers, hw, b, max_iters=200),
+                     incremental_dse_ref(layers, hw, b, max_iters=200))
+
+
+def test_incremental_dse_budget_sweep_identical_frontier():
+    """The (resource, throughput) frontier the DSE traces out matches the
+    reference at every budget, so downstream search scores are unchanged."""
+    layers = cnn_layer_costs(MOBILENETV3S)[:12]
+    hw = FPGAModel()
+    for budget in (16, 64, 256, 1024, 4096):
+        _assert_same(incremental_dse(layers, hw, budget, max_iters=400),
+                     incremental_dse_ref(layers, hw, budget, max_iters=400))
+
+
+def test_rate_balance_matches_ref_randomized():
+    rng = np.random.default_rng(7)
+    hw = FPGAModel()
+    for trial in range(20):
+        L = int(rng.integers(1, 16))
+        layers = _random_stack(rng, L)
+        designs = [DesignPoint(int(2 ** rng.integers(0, 10)),
+                               int(2 ** rng.integers(0, 10)))
+                   for _ in range(L)]
+        protect = set(int(i) for i in
+                      rng.choice(L, size=int(rng.integers(0, L)),
+                                 replace=False)) if L > 1 else set()
+        for strict in (False, True):
+            assert rate_balance(layers, designs, hw, protect=protect,
+                                strict=strict) == \
+                rate_balance_ref(layers, designs, hw, protect=protect,
+                                 strict=strict)
+
+
+def test_throughput_vec_matches_scalar():
+    rng = np.random.default_rng(3)
+    for hw, _ in HW:
+        layers = _random_stack(rng, 16)
+        lv = hw.layer_vectors(layers)
+        spe = 2 ** rng.integers(0, 10, size=16)
+        n = 2 ** rng.integers(0, 8, size=16)
+        vec_thr = hw.throughput_vec(lv, spe, n)
+        vec_res = hw.resource_vec(lv, spe, n)
+        for i, l in enumerate(layers):
+            d = DesignPoint(int(spe[i]), int(n[i]))
+            assert vec_thr[i] == hw.layer_throughput(l, d)
+            assert vec_res[i] == hw.layer_resource(l, d)

@@ -40,6 +40,28 @@ def test_sparsity_increases_modeled_throughput(evaluator):
     assert hi["thr"] > lo["thr"]
 
 
+def test_evaluate_batch_matches_serial(evaluator):
+    """One vmapped prune+forward for B proposals == B serial jit calls (up
+    to vmap-vs-jit float reassociation)."""
+    L = len(evaluator.prunable)
+    xs = [np.zeros(2 * L), np.full(2 * L, 0.4), np.full(2 * L, 0.75)]
+    batch = evaluator.evaluate_batch(xs)
+    assert len(batch) == 3
+    for x, mb in zip(xs, batch):
+        ms = evaluator(x)
+        for k in ms:
+            assert mb[k] == pytest.approx(ms[k], rel=1e-3, abs=1e-6), k
+
+
+def test_batched_search_on_cnn_evaluator(evaluator):
+    r = hass_search(evaluator, len(evaluator.prunable), iters=6,
+                    s_max=0.9, seed=0, batch_size=3)
+    assert len(r.trials) == 6
+    assert 0.0 <= r.best_metrics["acc"] <= 1.0
+    assert r.best_metrics["thr"] > 0
+
+
+@pytest.mark.slow
 def test_hw_aware_search_beats_software_only(evaluator):
     """Fig. 5: at equal iteration budget, the hardware-aware objective finds
     higher computation efficiency (throughput/resource)."""

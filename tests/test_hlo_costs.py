@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.analysis.hlo_costs import analyze, parse_hlo, trip_count
+from repro.analysis.hlo_costs import (analyze, cost_analysis_dict, parse_hlo,
+                                      trip_count)
 from repro.analysis.roofline import parse_collectives
 
 
@@ -26,7 +27,7 @@ def test_scan_flops_scaled_by_trip_count():
     xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     a = analyze(_compile(scan8, xs, ws).as_text())
-    truth = _compile(unrolled, xs, ws).cost_analysis()["flops"]
+    truth = cost_analysis_dict(_compile(unrolled, xs, ws))["flops"]
     assert a.flops == pytest.approx(truth, rel=1e-6)
     assert a.trip_counts == [8]
 

@@ -13,8 +13,18 @@ from repro.configs.base import ShapeConfig
 
 RNG = jax.random.PRNGKey(0)
 
+# heaviest compiles (hybrid/MLA/enc-dec towers); slow-marked so the tier-1
+# default run keeps one representative per family instead of every giant
+_HEAVY_ARCHS = {"zamba2-1.2b", "deepseek-v3-671b", "whisper-base",
+                "chameleon-34b", "stablelm-12b"}
 
-@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+
+def _arch_params():
+    return [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_ARCHS
+            else a for a in sorted(ASSIGNED)]
+
+
+@pytest.mark.parametrize("arch", _arch_params())
 def test_arch_smoke_forward_and_train_step(arch):
     cfg = reduce_config(get_config(arch))
     api = build_model(cfg)
@@ -57,7 +67,10 @@ def test_arch_smoke_decode_shapes(arch):
     assert int(new_cache["pos"][0]) == 1
 
 
-@pytest.mark.parametrize("cfg", PAPER_CNNS, ids=lambda c: c.name)
+@pytest.mark.parametrize(
+    "cfg", [c if c.name.startswith("resnet")
+            else pytest.param(c, marks=pytest.mark.slow)
+            for c in PAPER_CNNS], ids=lambda c: c.name)
 def test_paper_cnn_smoke(cfg):
     rcfg = reduce_config(cfg)
     api = build_model(rcfg)
