@@ -36,8 +36,20 @@ def run(budget: int = 12234, seed: int = 0):
                       "dsp": d.spe * d.macs_per_spe})
         print(f"  {l.name:10s} S̄={l.s_pair:.2f} SPE={d.spe:5d} "
               f"N={d.macs_per_spe:4d}")
+    # the full non-dominated (resource, throughput) frontier of the search —
+    # one run yields the whole budget sweep (DESIGN.md §10)
+    f = res.frontier
+    frontier = [{"res": float(r), "thr": float(t),
+                 "imgs_per_s": float(t) * hw.freq}
+                for r, t in zip(f.res, f.thr)]
+    print(f"  frontier: {len(f)} non-dominated points, "
+          f"res [{f.res[0]:.0f}, {f.res[-1]:.0f}] DSP -> "
+          f"thr [{f.thr[0] * hw.freq:.1f}, {f.thr[-1] * hw.freq:.1f}] img/s")
+    for k in np.linspace(0, len(f) - 1, min(8, len(f))).astype(int):
+        bar = "#" * max(1, int(40 * f.thr[k] / f.thr[-1]))
+        print(f"    res={f.res[k]:7.0f} thr={f.thr[k] * hw.freq:9.1f} {bar}")
     save_json("fig4.json", {"rows": table, "throughput": res.throughput,
-                            "resource": res.resource})
+                            "resource": res.resource, "frontier": frontier})
     # qualitative check: among equal-shape layers, sparser => smaller N
     emit("fig4.dse_allocation", us,
          f"layers={len(layers)} thr={res.throughput * hw.freq:.0f}img/s "

@@ -16,9 +16,12 @@ from repro.core.perf_model import FPGAModel
 
 
 def run(iters: int = 16, img_res: int = 64, seed: int = 0,
-        budget: int = 12234, batch_size: int = 8):
+        budget: int = 12234, batch_size: int = 8, chips: int = 1):
     """``batch_size``: TPE proposals evaluated per vmapped prune+forward
     round (DESIGN.md §8); ``None``/0 falls back to the serial ask/tell loop.
+    ``chips > 1`` additionally runs the partitioned multi-chip TPU DSE
+    (segment-table DP, ICI-aware switches — DESIGN.md §10) on the best
+    hardware-aware proposal's measured sparsities.
     """
     cfg = dataclasses.replace(RESNET18, img_res=img_res)
     params = trained_cnn(cfg, steps=20)
@@ -42,6 +45,21 @@ def run(iters: int = 16, img_res: int = 64, seed: int = 0,
         "sw_eff_curve": sw_res.running_best("eff"),
         "hw_best": hw_res.best_metrics, "sw_best": sw_res.best_metrics,
     }
+    if chips and chips > 1:
+        from repro.core.dse import partition_pipeline
+        from repro.core.perf_model import TPUModel
+        tpu = TPUModel(chips=chips)
+        layers = ev.sparse_layers(hw_res.best_x)
+        part = partition_pipeline(layers, tpu, tpu.chip_budget,
+                                  n_parts=chips, batch=256)
+        payload["multi_chip"] = {
+            "chips": chips, "cuts": part.cuts,
+            "parts": len(part.cuts) + 1,
+            "time_per_batch": part.time_per_batch,
+            "imgs_per_s": part.throughput * tpu.freq,
+            "steady_imgs_per_s": part.steady_throughput * tpu.freq,
+            "dse_calls": part.dse_calls,
+        }
     save_json("fig5.json", payload)
     gain = hw_res.best_metrics["eff"] / max(sw_res.best_metrics["eff"], 1e-9)
     emit("fig5.search_compare", us_hw + us_sw,
@@ -57,5 +75,8 @@ if __name__ == "__main__":
     ap.add_argument("--iters", type=int, default=96)
     ap.add_argument("--batch-size", type=int, default=8,
                     help="proposals per vmapped evaluation round (0=serial)")
+    ap.add_argument("--chips", type=int, default=1,
+                    help="TPU chips for the partitioned multi-chip DSE "
+                         "(1 = skip)")
     args = ap.parse_args()
-    run(iters=args.iters, batch_size=args.batch_size)
+    run(iters=args.iters, batch_size=args.batch_size, chips=args.chips)

@@ -18,11 +18,14 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=8,
                     help="TPE proposals per vmapped evaluation round "
                          "(0 = serial ask/tell loop)")
+    ap.add_argument("--chips", type=int, default=1,
+                    help="TPU chips for the partitioned multi-chip DSE on "
+                         "the best proposal (1 = skip)")
     args = ap.parse_args()
 
     from benchmarks.fig5_search_compare import run
     payload = run(iters=args.iters, img_res=args.img_res,
-                  batch_size=args.batch_size)
+                  batch_size=args.batch_size, chips=args.chips)
     hw, sw = payload["hw_best"], payload["sw_best"]
     print(f"\nsearch throughput: {payload['trials_per_s']:.2f} trials/s "
           f"(batch={args.batch_size})")
@@ -32,6 +35,13 @@ def main() -> None:
           f"thr={sw['thr']:.0f} img/s dsp={sw['dsp']:.2f}")
     print(f"efficiency gain from hardware awareness: "
           f"{hw['eff'] / max(sw['eff'], 1e-9):.2f}x  (paper Fig. 5: higher)")
+    mc = payload.get("multi_chip")
+    if mc:
+        print(f"\npartitioned multi-chip TPU DSE ({mc['chips']} chips): "
+              f"{mc['parts']} partitions, cuts={mc['cuts']}")
+        print(f"  amortized {mc['imgs_per_s']:.0f} img/s "
+              f"(steady pipeline {mc['steady_imgs_per_s']:.0f} img/s, "
+              f"{mc['dse_calls']} segment DSEs)")
 
 
 if __name__ == "__main__":

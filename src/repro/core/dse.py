@@ -5,22 +5,95 @@ Implements, verbatim in structure:
   2. resource-constrained rate balancing (Eq. 4–5),
   3. resource-constrained incrementing (start minimal; repeatedly grow the
      slowest layer, then re-balance, until the budget R is exhausted),
-  4. partitioning & reconfiguration (SA over pipeline split points; on TPU
-     "full reconfiguration" = switching the mesh program between partitions,
-     amortized by batch size).
+  4. partitioning & reconfiguration (exact DP over pipeline split points on
+     a memoized per-segment Pareto-frontier table; on TPU "full
+     reconfiguration" = switching the mesh program between partitions —
+     or, multi-chip, the ICI boundary transfer — amortized by batch size;
+     the paper's SA loop is retained as ``partition_pipeline_sa``).
+
+Every search also returns its full (resource, throughput) ``ParetoFrontier``
+with materializable per-point design state (DESIGN.md §10).
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, replace
-from typing import List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.annealing import simulated_annealing
-from repro.core.perf_model import (DesignPoint, HardwareModel, LayerCost,
-                                   LayerVectors, pipeline_throughput,
-                                   t_cycles)
+from repro.core.perf_model import (ACT_BYTES, DesignPoint, HardwareModel,
+                                   LayerCost, LayerVectors, TPUModel,
+                                   pipeline_throughput, t_cycles)
+
+
+@dataclass
+class ParetoFrontier:
+    """The non-dominated (resource, throughput) set traced by one DSE run.
+
+    Both arrays are sorted strictly increasing, so the frontier *is* the
+    budget -> throughput function of the search: ``best_under(b)`` is a
+    binary search, and ``materialize(k)`` rebuilds the concrete per-layer
+    ``DesignPoint`` list of point ``k`` from the captured design state —
+    no re-run of the greedy loop. Interior points are as-searched states
+    on the growth path (strict-balanced); the last point is the final
+    Eq. 4-trimmed search result, so ``best_under(search_budget)`` equals
+    the ``DSEResult`` exactly (DESIGN.md §10).
+    """
+    res: np.ndarray               # (K,) float64, strictly increasing
+    thr: np.ndarray               # (K,) float64, strictly increasing
+    spe: np.ndarray               # (K, L) int64 design-state snapshots
+    n: np.ndarray                 # (K, L) int64
+
+    def __len__(self) -> int:
+        return len(self.res)
+
+    def point(self, k: int) -> Tuple[float, float]:
+        return float(self.res[k]), float(self.thr[k])
+
+    def best_under(self, budget: float) -> Optional[int]:
+        """Index of the max-throughput point with resource <= budget, or
+        None when even the cheapest point exceeds the budget."""
+        k = int(np.searchsorted(self.res, budget, side="right")) - 1
+        return k if k >= 0 else None
+
+    def select(self, score: Callable[[np.ndarray, np.ndarray], np.ndarray]) -> int:
+        """Argmax of a vectorized ``score(res, thr)`` over frontier points —
+        how Eq. 6 consumers pick a trade-off point without re-searching."""
+        return int(np.argmax(score(self.res, self.thr)))
+
+    def materialize(self, k: int) -> List[DesignPoint]:
+        return _designs_from(self.spe[k], self.n[k])
+
+
+def _build_frontier(res_pts: List[float], thr_pts: List[float],
+                    states: List[Tuple[List[int], List[int]]]) -> ParetoFrontier:
+    """Skyline of the recorded search path. The last input point is the
+    final (Eq. 4-trimmed) result: it is made the canonical representative of
+    its throughput level (using the DSE's own 1e-9 bottleneck tolerance) so
+    near-duplicate as-searched states never shadow it under ``best_under``."""
+    f_res, f_thr = res_pts[-1], thr_pts[-1]
+    lo, hi = f_thr * (1 - 1e-9), f_thr * (1 + 1e-9)
+    idx = [i for i in range(len(res_pts) - 1)
+           if not (lo <= thr_pts[i] <= hi)
+           and not (res_pts[i] >= f_res and thr_pts[i] <= hi)]
+    idx.append(len(res_pts) - 1)
+    idx.sort(key=lambda i: (res_pts[i], -thr_pts[i]))
+    keep: List[int] = []
+    best = -math.inf
+    for i in idx:
+        if thr_pts[i] > best:
+            keep.append(i)
+            best = thr_pts[i]
+    L = len(states[-1][0])
+    return ParetoFrontier(
+        res=np.array([res_pts[i] for i in keep], dtype=np.float64),
+        thr=np.array([thr_pts[i] for i in keep], dtype=np.float64),
+        spe=np.array([states[i][0] for i in keep],
+                     dtype=np.int64).reshape(len(keep), L),
+        n=np.array([states[i][1] for i in keep],
+                   dtype=np.int64).reshape(len(keep), L))
 
 
 @dataclass
@@ -30,6 +103,7 @@ class DSEResult:
     resource: float               # total resource units (DSPs / tile-lanes)
     throughput_per_res: float
     trace: List[Tuple[float, float]]  # (resource, throughput) per increment
+    frontier: Optional[ParetoFrontier] = None
 
     def images_per_s(self, hw: HardwareModel) -> float:
         return self.throughput * hw.freq
@@ -218,10 +292,14 @@ def _run_incremental(lv: LayerVectors, hw: HardwareModel, budget: float,
         return changed
 
     trace: List[Tuple[float, float]] = []
+    # design-state snapshot per trace row: any frontier point can later be
+    # materialized into concrete DesignPoints without re-running the search
+    states: List[Tuple[List[int], List[int]]] = []
     for _ in range(max_iters):
         cur_thr = min(thr)
         slow = thr.index(cur_thr)
         trace.append((res_total, cur_thr))
+        states.append((spe.copy(), n.copy()))
         # candidate increments for the slowest layer (macs_per_spe doubling
         # first — the reference option order, which wins Δthr/Δres ties)
         cur_res = spe[slow] * n[slow] * unit[slow]
@@ -259,8 +337,12 @@ def _run_incremental(lv: LayerVectors, hw: HardwareModel, budget: float,
     theta_r = min(thr)
     hi = theta_r * (1 + 1e-9)
     balance(theta_r * (1 - 1e-12), skip=[r <= hi for r in thr])
+    f_thr = min(thr)
+    states.append((spe.copy(), n.copy()))
+    frontier = _build_frontier([r for r, _ in trace] + [res_total],
+                               [t for _, t in trace] + [f_thr], states)
     return (np.array(spe, dtype=np.int64), np.array(n, dtype=np.int64),
-            min(thr), res_total, trace)
+            f_thr, res_total, trace, frontier)
 
 
 def incremental_dse(layers: Sequence[LayerCost], hw: HardwareModel,
@@ -268,12 +350,17 @@ def incremental_dse(layers: Sequence[LayerCost], hw: HardwareModel,
     """§V-A.3: start resource-minimal, grow the slowest layer, re-balance.
 
     Vectorized greedy loop — identical designs/throughput/resource/trace to
-    ``incremental_dse_ref`` (property-tested), ~10–100x faster."""
+    ``incremental_dse_ref`` (property-tested), ~10–100x faster. The returned
+    ``DSEResult.frontier`` holds the full non-dominated (resource,
+    throughput) set of the search path with per-point design state, so
+    consumers (Eq. 6 scoring, DP partitioning) trade points without
+    re-running the search (``incremental_dse_ref`` leaves it None)."""
     lv = hw.layer_vectors(layers)
-    spe, n, thr, res, trace = _run_incremental(lv, hw, budget, max_iters)
+    spe, n, thr, res, trace, frontier = _run_incremental(lv, hw, budget,
+                                                         max_iters)
     return DSEResult(designs=_designs_from(spe, n), throughput=thr,
                      resource=res, throughput_per_res=thr / max(res, 1e-9),
-                     trace=trace)
+                     trace=trace, frontier=frontier)
 
 
 def incremental_dse_ref(layers: Sequence[LayerCost], hw: HardwareModel,
@@ -321,23 +408,160 @@ def incremental_dse_ref(layers: Sequence[LayerCost], hw: HardwareModel,
 
 
 # --------------------------------------------------------------------- #
-# Partitioning & reconfiguration (§V-A.4)
+# Partitioning & reconfiguration (§V-A.4): segment-table DP
 # --------------------------------------------------------------------- #
 @dataclass
 class PartitionResult:
     cuts: List[int]               # split indices (exclusive prefix ends)
     batch: int
-    time_per_batch: float         # cycles, incl. reconfiguration
+    time_per_batch: float         # cycles, incl. switch/transfer overhead
     throughput: float             # samples/cycle amortized
+    part_throughput: List[float] = field(default_factory=list)
+    part_designs: List[List[DesignPoint]] = field(default_factory=list)
+    steady_throughput: float = 0.0  # spatial-pipeline rate (multi-chip):
+    #                                 min over partition rates and ICI hops
+    dse_calls: int = 0            # segment DSE invocations (memoized table)
+
+
+class SegmentTable:
+    """Memoized per-contiguous-segment DSE frontiers for partitioning.
+
+    Each contiguous segment ``layers[i:j]`` is searched at most ONCE; the
+    DP below then reads amortized batch times off the cached frontiers. The
+    total segment-DSE count is therefore bounded by L(L+1)/2 regardless of
+    how many cut configurations the optimizer considers — unlike SA, whose
+    DSE count scales with annealing steps x partitions and which still only
+    samples the cut space (DESIGN.md §10).
+    """
+
+    def __init__(self, layers: Sequence[LayerCost], hw: HardwareModel,
+                 budget: float, batch: int, dse_iters: int):
+        self.layers = list(layers)
+        self.hw, self.budget = hw, budget
+        self.batch, self.dse_iters = batch, dse_iters
+        self._cache: Dict[Tuple[int, int], ParetoFrontier] = {}
+        self.dse_calls = 0
+
+    def frontier(self, i: int, j: int) -> ParetoFrontier:
+        key = (i, j)
+        if key not in self._cache:
+            self.dse_calls += 1
+            r = incremental_dse(self.layers[i:j], self.hw, self.budget,
+                                max_iters=self.dse_iters)
+            self._cache[key] = r.frontier
+        return self._cache[key]
+
+    def _best(self, i: int, j: int) -> int:
+        f = self.frontier(i, j)
+        k = f.best_under(self.budget)
+        # infeasible budget: the resource-minimal design still runs (the
+        # greedy's own behavior when it cannot afford any growth)
+        return 0 if k is None else k
+
+    def throughput(self, i: int, j: int) -> float:
+        f = self.frontier(i, j)
+        return float(f.thr[self._best(i, j)])
+
+    def time(self, i: int, j: int) -> float:
+        thr = self.throughput(i, j)
+        return self.batch / thr if thr > 0 else float("inf")
+
+    def designs(self, i: int, j: int) -> List[DesignPoint]:
+        f = self.frontier(i, j)
+        return f.materialize(self._best(i, j))
 
 
 def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
                        budget: float, *, n_parts: int, batch: int = 256,
                        reconfig_cycles: float = 5e7, seed: int = 0,
                        dse_iters: int = 300) -> PartitionResult:
-    """Fold the pipeline into ``n_parts`` sequential partitions, each run with
-    the full budget (FPGA full reconfiguration / TPU program switch). SA over
-    cut positions trades reconfiguration time vs per-partition throughput."""
+    """Fold the pipeline into at most ``n_parts`` sequential partitions, each
+    run with the full per-partition ``budget``. Exact DP over cut positions
+    on a memoized per-segment frontier table (one DSE per contiguous
+    segment) — replaces the SA loop, which re-ran the full segment DSE on
+    every annealing step (kept as ``partition_pipeline_sa``).
+
+    Reconfiguration accounting: a schedule with P resident partitions
+    charges P - 1 *switches* per processed batch — the mid-batch program
+    transitions. A single resident partition is never reconfigured, and
+    reloading the first partition for the next batch overlaps with host-side
+    batch staging, so neither is charged. On a multi-chip ``TPUModel`` each
+    partition is resident on its own chip and a switch is instead the ICI
+    transfer of the whole batch's boundary activations
+    (``TPUModel.ici_transfer_cycles``); ``n_parts`` is additionally capped
+    at ``hw.chips`` and ``steady_throughput`` reports the spatial-pipeline
+    rate (min over partition and ICI-hop rates). The DP may use fewer than
+    ``n_parts`` partitions when a switch costs more than it saves.
+    ``seed`` is accepted for API compatibility with the SA reference and is
+    unused — the DP is deterministic.
+    """
+    L = len(layers)
+    multi_chip = isinstance(hw, TPUModel) and hw.chips > 1
+    n_parts = min(n_parts, L, hw.chips) if multi_chip else min(n_parts, L)
+    n_parts = max(n_parts, 1)
+    seg = SegmentTable(layers, hw, budget, batch, dse_iters)
+
+    def switch_cost(cut: int) -> float:
+        """Cycles charged for the transition at cut position ``cut``."""
+        if multi_chip:
+            n_bytes = float(batch) * layers[cut - 1].act_out * ACT_BYTES
+            return hw.ici_transfer_cycles(n_bytes)
+        return reconfig_cycles
+
+    INF = float("inf")
+    # T[p][j]: min cycles for layers[:j] as exactly p partitions + switches
+    T = [[INF] * (L + 1) for _ in range(n_parts + 1)]
+    T[0][0] = 0.0
+    back = [[-1] * (L + 1) for _ in range(n_parts + 1)]
+    for p in range(1, n_parts + 1):
+        # prefixes T[p][j < L] only feed deeper recursions; the last p level
+        # needs the full-pipeline entry alone
+        js = range(p, L + 1) if p < n_parts else (L,)
+        for j in js:
+            for i in range(p - 1, j):
+                if T[p - 1][i] == INF:
+                    continue
+                t = T[p - 1][i] + seg.time(i, j) + \
+                    (switch_cost(i) if i else 0.0)
+                if t < T[p][j]:
+                    T[p][j], back[p][j] = t, i
+    best_p = min(range(1, n_parts + 1), key=lambda p: T[p][L])
+    cuts: List[int] = []
+    j = L
+    for p in range(best_p, 0, -1):
+        i = back[p][j]
+        if i > 0:
+            cuts.append(i)
+        j = i
+    cuts.reverse()
+    bounds = [0] + cuts + [L]
+    part_thr = [seg.throughput(a, b) for a, b in zip(bounds, bounds[1:])]
+    part_designs = [seg.designs(a, b) for a, b in zip(bounds, bounds[1:])]
+    steady = min(part_thr) if part_thr else 0.0
+    if multi_chip:
+        for c in cuts:
+            hop = hw.ici_transfer_cycles(float(layers[c - 1].act_out)
+                                         * ACT_BYTES)   # cycles/sample
+            steady = min(steady, 1.0 / hop if hop > 0 else steady)
+    total = T[best_p][L]
+    return PartitionResult(cuts=cuts, batch=batch, time_per_batch=total,
+                           throughput=batch / total if total > 0 else 0.0,
+                           part_throughput=part_thr,
+                           part_designs=part_designs,
+                           steady_throughput=steady,
+                           dse_calls=seg.dse_calls)
+
+
+def partition_pipeline_sa(layers: Sequence[LayerCost], hw: HardwareModel,
+                          budget: float, *, n_parts: int, batch: int = 256,
+                          reconfig_cycles: float = 5e7, seed: int = 0,
+                          dse_iters: int = 300) -> PartitionResult:
+    """Pre-DP SA-over-cuts implementation, retained as the comparison
+    baseline (benchmarks/dse_bench.py, tests/test_partition_dp.py). Re-runs
+    the segment DSE inside every annealing energy evaluation — the cost the
+    memoized segment table removes. Uses the same switch accounting as
+    ``partition_pipeline`` (P - 1 switches per processed batch) so the two
+    optimize an identical objective over exactly ``n_parts`` partitions."""
     L = len(layers)
     n_parts = min(n_parts, L)
 
@@ -353,7 +577,7 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
                 return float("inf")
             total += batch / r.throughput
             prev = c
-        total += reconfig_cycles * n_parts
+        total += reconfig_cycles * len(list(cuts))
         return total
 
     if n_parts <= 1:

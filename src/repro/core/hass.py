@@ -11,7 +11,7 @@ the DSE (rate balancing + incrementing) under a resource budget, and score
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -78,6 +78,11 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
       dsp   >0       — resource utilization fraction in [0,1]
     x layout: [s_w_0..s_w_{L-1}] (+ [s_a_0..s_a_{L-1}] when include_act).
 
+    When the evaluator exposes a ``lambdas`` attribute (``CNNEvaluator``), a
+    hardware-aware search installs a copy of its own ``lambdas`` for the
+    duration of the search (restored afterwards) so that frontier-point
+    selection and trial scoring share one set of Eq. 6 weights.
+
     ``batch_size`` switches to the batched frontier (DESIGN.md §8): each
     round asks the TPE for a batch of proposals and scores them through
     ``evaluate.evaluate_batch(xs)`` when the evaluator provides it (one
@@ -91,7 +96,6 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
     opt = TPE(lo=np.zeros(dim), hi=np.full(dim, s_max), seed=seed)
     result = SearchResult(best_x=np.zeros(dim), best_score=-np.inf,
                           best_metrics={})
-
     def record(x: np.ndarray, m: Dict[str, float]) -> float:
         score = m["acc"] + lambdas.spa * m["spa"]
         if hardware_aware:
@@ -102,26 +106,39 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
             result.best_score, result.best_x, result.best_metrics = score, x, m
         return score
 
-    if batch_size is None:
-        for it in range(iters):
-            x = opt.ask()
-            m = dict(evaluate(x))
-            opt.tell(x, record(x, m))
-        return result
+    # align the evaluator's frontier-point selection with this search's
+    # Eq. 6 weights for the duration of the search (a COPY — never alias the
+    # shared default-arg instance — and restored afterwards, so a later
+    # software-only baseline on the same evaluator scores at the evaluator's
+    # own trade-off point)
+    sync_lam = hardware_aware and hasattr(evaluate, "lambdas")
+    old_lam = evaluate.lambdas if sync_lam else None
+    if sync_lam:
+        evaluate.lambdas = replace(lambdas)
+    try:
+        if batch_size is None:
+            for it in range(iters):
+                x = opt.ask()
+                m = dict(evaluate(x))
+                opt.tell(x, record(x, m))
+            return result
 
-    if batch_size < 1:
-        raise ValueError(f"batch_size must be >= 1, got {batch_size}")
-    eval_batch = getattr(evaluate, "evaluate_batch", None)
-    done = 0
-    while done < iters:
-        k = min(batch_size, iters - done)
-        xs = opt.ask_batch(k)
-        ms = [dict(m) for m in eval_batch(xs)] \
-            if eval_batch is not None and k > 1 \
-            else [dict(evaluate(x)) for x in xs]
-        opt.tell_batch(xs, [record(x, m) for x, m in zip(xs, ms)])
-        done += k
-    return result
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        eval_batch = getattr(evaluate, "evaluate_batch", None)
+        done = 0
+        while done < iters:
+            k = min(batch_size, iters - done)
+            xs = opt.ask_batch(k)
+            ms = [dict(m) for m in eval_batch(xs)] \
+                if eval_batch is not None and k > 1 \
+                else [dict(evaluate(x)) for x in xs]
+            opt.tell_batch(xs, [record(x, m) for x, m in zip(xs, ms)])
+            done += k
+        return result
+    finally:
+        if sync_lam:
+            evaluate.lambdas = old_lam
 
 
 # --------------------------------------------------------------------- #
@@ -143,6 +160,8 @@ class CNNEvaluator:
     dse_iters: int = 400
     cost_cfg: object = None     # full-res config for C_l (accuracy runs can
                                 # use a reduced img_res; layer names match)
+    lambdas: Lambdas = field(default_factory=Lambdas)  # Eq. 6 weights used
+                                # to pick the frontier trade-off point
 
     def __post_init__(self):
         from repro.core.perf_model import cnn_layer_costs
@@ -184,6 +203,12 @@ class CNNEvaluator:
         # batched frontier: one vmapped prune+forward for a whole batch of
         # proposals (compiled once per batch shape) instead of B jit calls
         self._eval_batch = jax.jit(jax.vmap(_eval, in_axes=(None, 0, 0)))
+        # batch-shape bucketing state: ``batch_shapes`` records every batch
+        # shape actually handed to the vmapped executable (== compiles);
+        # ragged batches pad up to an already-compiled shape when one is
+        # close enough (see ``evaluate_batch``)
+        self.batch_shapes: set = set()
+        self.padded_batches: int = 0
 
     def _collect_act_samples(self) -> Dict[str, np.ndarray]:
         """|activation| quantiles at each prunable layer's input (dense run):
@@ -209,10 +234,8 @@ class CNNEvaluator:
         s_a = jnp.asarray(x[L:2 * L]) if len(x) >= 2 * L else jnp.zeros(L)
         return s_w, s_a
 
-    def _metrics(self, acc: float, sw_meas: np.ndarray,
-                 sa_meas: np.ndarray) -> Dict[str, float]:
-        """Measured per-layer sparsity -> perf model (Eq. 1-3) -> DSE ->
-        the Eq. 6 metric dict."""
+    def _sparse_layers(self, sw_meas: np.ndarray, sa_meas: np.ndarray):
+        """Measured per-layer sparsity -> LayerCost pipeline + avg sparsity."""
         layers = []
         spa_num = spa_den = 0.0
         i = 0
@@ -225,18 +248,50 @@ class CNNEvaluator:
                 spa_den += l.weight_count
             else:
                 layers.append(l)
+        return layers, spa_num / max(spa_den, 1e-9)
+
+    def sparse_layers(self, x: np.ndarray):
+        """The measured sparse LayerCost pipeline for one proposal (one
+        jitted prune+forward). Feeds the partitioned multi-chip DSE demo."""
+        s_w, s_a = self._split(x)
+        _, sw_meas, sa_meas = map(np.asarray,
+                                  self._eval(self.params, s_w, s_a))
+        return self._sparse_layers(sw_meas, sa_meas)[0]
+
+    def _hw_terms(self, res: np.ndarray, thr: np.ndarray):
+        """(thr in samples/s, thr_norm, dsp) for frontier points, vectorized.
+        thr_norm is the log-compressed speedup: Eq. 6's lambda-normalization
+        heuristic keeps the hardware terms commensurate with acc in [0, 1]."""
+        thr_s = thr * self.hw.freq
+        thr_norm = np.log2(1.0 + thr_s / max(self.dense_thr, 1e-9)) / 4.0
+        return thr_s, thr_norm, res / max(self.budget, 1e-9)
+
+    def _eq6_hw_score(self, res: np.ndarray, thr: np.ndarray) -> np.ndarray:
+        """The Eq. 6 hardware combination used to pick the frontier point."""
+        _, thr_norm, dsp = self._hw_terms(res, thr)
+        return self.lambdas.thr * thr_norm - self.lambdas.dsp * dsp
+
+    def _metrics(self, acc: float, sw_meas: np.ndarray,
+                 sa_meas: np.ndarray) -> Dict[str, float]:
+        """Measured per-layer sparsity -> perf model (Eq. 1-3) -> one DSE ->
+        pick the Eq. 6-optimal point on its frontier -> the metric dict.
+
+        A single DSE run yields the whole (resource, throughput) frontier;
+        the hardware terms of Eq. 6 are scored at the frontier point
+        maximizing lambda_thr*thr_norm - lambda_dsp*dsp under the budget,
+        instead of always paying the full-budget endpoint's dsp."""
+        layers, spa = self._sparse_layers(sw_meas, sa_meas)
         dse = incremental_dse(layers, self.hw, self.budget,
                               max_iters=self.dse_iters)
-        thr = dse.throughput * self.hw.freq
-        # log-compressed speedup: Eq. 6's lambda-normalization heuristic keeps
-        # the hardware terms commensurate with acc in [0, 1]
-        thr_norm = float(np.log2(1.0 + thr / max(self.dense_thr, 1e-9)) / 4.0)
+        f = dse.frontier
+        k = f.select(self._eq6_hw_score)
+        thr_pts, thr_norm_pts, dsp_pts = self._hw_terms(f.res, f.thr)
         return {"acc": acc,
-                "spa": spa_num / max(spa_den, 1e-9),
-                "thr": thr,
-                "thr_norm": thr_norm,
-                "dsp": dse.resource / max(self.budget, 1e-9),
-                "eff": thr / max(dse.resource, 1e-9)}
+                "spa": spa,
+                "thr": float(thr_pts[k]),
+                "thr_norm": float(thr_norm_pts[k]),
+                "dsp": float(dsp_pts[k]),
+                "eff": float(thr_pts[k]) / max(float(f.res[k]), 1e-9)}
 
     def __call__(self, x: np.ndarray) -> Dict[str, float]:
         # 1-2) one-shot prune + accuracy proxy + measured act sparsity (jitted)
@@ -248,13 +303,34 @@ class CNNEvaluator:
     def evaluate_batch(self, xs: Sequence[np.ndarray]) -> List[Dict[str, float]]:
         """Score a batch of proposals with ONE vmapped prune+forward call;
         the (fast, vectorized) DSE then runs per proposal on the measured
-        sparsities. Feeds ``hass_search(batch_size=...)``."""
+        sparsities. Feeds ``hass_search(batch_size=...)``.
+
+        Batch-shape bucketing: a ragged batch (a search's tail round) is
+        padded up to the nearest already-compiled batch shape by repeating
+        the last proposal. Padded rows are dropped before returning, so they
+        never reach ``tell_batch`` — a whole fixed-size search compiles
+        exactly one vmapped executable."""
         if len(xs) == 0:
             return []
+        B = len(xs)
         split = [self._split(x) for x in xs]
         s_w = jnp.stack([s for s, _ in split])
         s_a = jnp.stack([a for _, a in split])
+        # bucket rule: pad up to the smallest already-compiled shape in
+        # [B, 2B] (a one-time compile beats repeated >2x padding waste, e.g.
+        # a later smaller-batch search on a shared evaluator); otherwise
+        # compile this exact size
+        bigger = [s for s in self.batch_shapes if B <= s <= 2 * B]
+        target = min(bigger) if bigger else B
+        if B < target:
+            pad = target - B
+            s_w = jnp.concatenate(
+                [s_w, jnp.broadcast_to(s_w[-1], (pad,) + s_w.shape[1:])])
+            s_a = jnp.concatenate(
+                [s_a, jnp.broadcast_to(s_a[-1], (pad,) + s_a.shape[1:])])
+            self.padded_batches += 1
+        self.batch_shapes.add(int(s_w.shape[0]))
         accs, sw_meas, sa_meas = map(
             np.asarray, self._eval_batch(self.params, s_w, s_a))
         return [self._metrics(float(accs[b]), sw_meas[b], sa_meas[b])
-                for b in range(len(xs))]
+                for b in range(B)]

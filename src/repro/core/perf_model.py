@@ -38,6 +38,7 @@ ICI_BW = 50e9                # bytes/s per link
 ICI_LINKS = 4                # 2D torus
 HBM_BYTES = 16 * 2 ** 30
 MXU_TILE = 128               # systolic dim: tiles are 128-aligned
+ACT_BYTES = 2                # bf16 activations (ICI boundary transfers)
 
 
 @dataclass
@@ -174,7 +175,13 @@ class FPGAModel(HardwareModel):
 class TPUModel(HardwareModel):
     """TPU adaptation: an SPE lane is one 128x128 MXU tile-row pass; N maps to
     tiles processed per pass; resource = chip-MXU occupancy (in tile-lanes).
-    Compute skipping is tile-granular (s_w_tile)."""
+    Compute skipping is tile-granular (s_w_tile).
+
+    ``chips > 1`` models a multi-chip slice: a pipeline partition is resident
+    on one chip (a mesh program does not span chips), so per-partition DSE
+    runs against ``chip_budget`` and the partition handoff is an ICI transfer
+    of the boundary activations (``ici_transfer_cycles``) instead of an FPGA
+    full reconfiguration — DESIGN.md §10."""
     freq: float = 940e6           # v5e MXU clock
     chips: int = 1
     lanes_per_chip: int = 4 * 128  # 4 MXUs x 128 rows
@@ -188,6 +195,16 @@ class TPUModel(HardwareModel):
     @property
     def budget(self) -> float:
         return self.chips * self.lanes_per_chip
+
+    @property
+    def chip_budget(self) -> float:
+        """Tile-lane budget of a single chip (one resident partition)."""
+        return float(self.lanes_per_chip)
+
+    def ici_transfer_cycles(self, n_bytes: float) -> float:
+        """MXU cycles to move ``n_bytes`` across one chip-to-chip hop, all
+        torus links aggregated (the roofline collective constants)."""
+        return n_bytes / (ICI_BW * ICI_LINKS) * self.freq
 
 
 def pipeline_throughput(layers: Sequence[LayerCost],

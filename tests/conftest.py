@@ -17,3 +17,21 @@ except ImportError:
 
     sys.modules["hypothesis"] = _hypothesis_stub
     sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+
+
+def sparse_cnn_workload(cfg, seed=1):
+    """Paper-CNN layer stack with per-layer sparsity stats in the paper's
+    reported range (§VI) — the shared workload for the frontier and DP
+    partitioning tests (benchmarks/dse_bench.py keeps a standalone copy with
+    the same convention)."""
+    import numpy as np
+
+    from repro.core.perf_model import cnn_layer_costs
+
+    rng = np.random.default_rng(seed)
+    layers = cnn_layer_costs(cfg)
+    for l in layers:
+        l.s_w = float(rng.uniform(0.1, 0.8))
+        l.s_a = float(rng.uniform(0.1, 0.6))
+        l.s_w_tile = float(rng.uniform(0.0, 0.4))
+    return layers

@@ -82,8 +82,13 @@ def test_partitioning_tradeoff():
     two = partition_pipeline(layers, hw, budget=256, n_parts=2, batch=256,
                              reconfig_cycles=1e6, dse_iters=100)
     assert one.time_per_batch > 0 and two.time_per_batch > 0
-    # with a huge reconfig cost, fewer partitions must win
+    # n_parts is an upper bound: the extra partition is used only when the
+    # throughput gain repays the switch, so the DP can never be worse
+    assert two.time_per_batch <= one.time_per_batch
+    # with a huge reconfig cost the DP folds back to a single resident
+    # partition (which is never reconfigured — no charge)
     expensive = partition_pipeline(layers, hw, budget=256, n_parts=2,
                                    batch=256, reconfig_cycles=1e12,
-                                   dse_iters=60)
-    assert one.time_per_batch < expensive.time_per_batch
+                                   dse_iters=100)
+    assert expensive.cuts == []
+    assert expensive.time_per_batch == one.time_per_batch

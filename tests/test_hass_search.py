@@ -5,6 +5,7 @@ import pytest
 
 from repro.configs import reduce_config
 from repro.configs.paper_cnns import RESNET18
+from repro.core.dse import incremental_dse
 from repro.core.hass import CNNEvaluator, Lambdas, hass_search
 from repro.core.perf_model import FPGAModel
 from repro.models import cnn
@@ -59,6 +60,45 @@ def test_batched_search_on_cnn_evaluator(evaluator):
     assert len(r.trials) == 6
     assert 0.0 <= r.best_metrics["acc"] <= 1.0
     assert r.best_metrics["thr"] > 0
+
+
+def test_metrics_pick_eq6_optimal_frontier_point(evaluator):
+    """The hardware terms are scored at the frontier point maximizing the
+    Eq. 6 combination — one DSE run, no re-search over budgets."""
+    L = len(evaluator.prunable)
+    x = np.full(2 * L, 0.5)
+    m = evaluator(x)
+    layers = evaluator.sparse_layers(x)
+    f = incremental_dse(layers, evaluator.hw, evaluator.budget,
+                        max_iters=evaluator.dse_iters).frontier
+    thr_pts = f.thr * evaluator.hw.freq
+    thr_norm = np.log2(1.0 + thr_pts / evaluator.dense_thr) / 4.0
+    dsp = f.res / evaluator.budget
+    lam = evaluator.lambdas
+    scores = lam.thr * thr_norm - lam.dsp * dsp
+    k = int(np.argmax(scores))
+    assert m["thr"] == pytest.approx(float(thr_pts[k]))
+    assert m["dsp"] == pytest.approx(float(dsp[k]))
+    # never worse than always paying the full-budget endpoint (last point)
+    assert scores[k] >= scores[-1] - 1e-15
+
+
+def test_ragged_tail_batch_is_padded_to_one_compiled_shape(evaluator):
+    """Batch-shape bucketing: a search whose last round is ragged pads it to
+    the fixed batch shape, so no new vmapped executable is compiled, and the
+    padded rows never reach tell_batch."""
+    shapes_before = set(evaluator.batch_shapes)
+    padded_before = evaluator.padded_batches
+    r = hass_search(evaluator, len(evaluator.prunable), iters=8,
+                    s_max=0.9, seed=1, batch_size=3)    # rounds 3 + 3 + 2
+    assert len(r.trials) == 8                           # padding masked out
+    assert evaluator.padded_batches > padded_before
+    assert evaluator.batch_shapes - shapes_before <= {3}
+    # a padded-round trial scores the same as the serial evaluator
+    t = r.trials[-1]
+    ms = evaluator(t.x)
+    for k in ms:
+        assert t.metrics[k] == pytest.approx(ms[k], rel=1e-3, abs=1e-6), k
 
 
 @pytest.mark.slow

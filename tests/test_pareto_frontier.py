@@ -1,0 +1,117 @@
+"""ParetoFrontier contract (DESIGN.md §10).
+
+Every DSE run returns its full non-dominated (resource, throughput)
+frontier with materializable per-point design state. The contract:
+monotone + non-dominated, best-under-budget bit-exactly equal to the
+single-point ``incremental_dse``/``incremental_dse_ref`` result, and every
+materialized point reproducing its recorded (resource, throughput) without
+re-running the search.
+"""
+import numpy as np
+import pytest
+from conftest import sparse_cnn_workload as _paper_stack
+
+from repro.configs.paper_cnns import MOBILENETV3S, RESNET18
+from repro.core.dse import incremental_dse, incremental_dse_ref
+from repro.core.perf_model import (FPGAModel, LayerCost, TPUModel,
+                                   pipeline_throughput)
+
+HW = [(FPGAModel(), 12288.0), (TPUModel(), TPUModel().budget)]
+
+
+def _random_stack(rng, L):
+    return [LayerCost(f"l{i}", macs=int(rng.integers(0, 10 ** 7)),
+                      m_dot=int(rng.integers(1, 4096)),
+                      weight_count=1, act_in=1, act_out=1,
+                      s_w=float(rng.uniform(0, 1.0)),
+                      s_a=float(rng.uniform(0, 0.9)),
+                      s_w_tile=float(rng.uniform(0, 0.5)),
+                      prunable=bool(rng.integers(2)))
+            for i in range(L)]
+
+
+@pytest.mark.parametrize("hw,budget", HW, ids=["fpga", "tpu"])
+def test_frontier_is_monotone_and_non_dominated(hw, budget):
+    rng = np.random.default_rng(11)
+    for trial in range(10):
+        layers = _random_stack(rng, int(rng.integers(1, 20)))
+        b = float(rng.integers(1, int(budget)))
+        f = incremental_dse(layers, hw, b, max_iters=200).frontier
+        assert len(f) >= 1
+        # strictly increasing in both coordinates == non-dominated
+        assert np.all(np.diff(f.res) > 0)
+        assert np.all(np.diff(f.thr) > 0)
+        assert f.spe.shape == (len(f), len(layers))
+        assert f.n.shape == (len(f), len(layers))
+
+
+@pytest.mark.parametrize("hw,budget", HW, ids=["fpga", "tpu"])
+def test_best_under_budget_matches_dse_result_bit_exactly(hw, budget):
+    """The frontier endpoint under the search budget IS the search result —
+    so every consumer that used to re-run the DSE can read the frontier."""
+    rng = np.random.default_rng(42)
+    for trial in range(8):
+        layers = _random_stack(rng, int(rng.integers(1, 20)))
+        b = float(rng.integers(1, int(budget)))
+        r = incremental_dse(layers, hw, b, max_iters=200)
+        ref = incremental_dse_ref(layers, hw, b, max_iters=200)
+        k = r.frontier.best_under(b)
+        if k is None:        # minimal design already over this tiny budget
+            assert r.frontier.res[0] > b
+            continue
+        assert r.frontier.res[k] == r.resource == ref.resource
+        assert r.frontier.thr[k] == r.throughput == ref.throughput
+        assert r.frontier.materialize(k) == r.designs == ref.designs
+
+
+@pytest.mark.parametrize("cfg", [RESNET18, MOBILENETV3S],
+                         ids=["resnet18", "mobilenetv3s"])
+def test_best_under_budget_matches_on_paper_cnns(cfg):
+    hw, budget = FPGAModel(), 8192.0
+    layers = _paper_stack(cfg)
+    r = incremental_dse(layers, hw, budget)
+    k = r.frontier.best_under(budget)
+    assert r.frontier.point(k) == (r.resource, r.throughput)
+    assert r.frontier.materialize(k) == r.designs
+
+
+@pytest.mark.parametrize("hw,budget", HW, ids=["fpga", "tpu"])
+def test_materialized_points_reproduce_recorded_values(hw, budget):
+    """Any frontier point rebuilds concrete DesignPoints whose modeled
+    throughput and summed resource equal the recorded pair exactly."""
+    layers = _paper_stack(RESNET18, seed=3)
+    f = incremental_dse(layers, hw, budget).frontier
+    for k in np.linspace(0, len(f) - 1, min(12, len(f))).astype(int):
+        designs = f.materialize(int(k))
+        thr = pipeline_throughput(layers, designs, hw)
+        res = sum(hw.layer_resource(l, d) for l, d in zip(layers, designs))
+        assert thr == f.thr[k]
+        assert res == f.res[k]
+
+
+def test_best_under_returns_none_below_minimal_design():
+    hw = FPGAModel()
+    layers = _paper_stack(RESNET18, seed=1)
+    f = incremental_dse(layers, hw, 4096.0).frontier
+    assert f.best_under(float(f.res[0])) == 0
+    assert f.best_under(float(f.res[0]) - 1.0) is None
+
+
+def test_select_maximizes_vectorized_score():
+    hw = FPGAModel()
+    layers = _paper_stack(RESNET18, seed=2)
+    f = incremental_dse(layers, hw, 8192.0).frontier
+    k = f.select(lambda res, thr: thr - 1e-7 * res)
+    scores = f.thr - 1e-7 * f.res
+    assert scores[k] == scores.max()
+
+
+def test_frontier_trace_consistency():
+    """Frontier points are drawn from the recorded search path: each one is
+    either a trace row or the final trimmed result."""
+    hw = FPGAModel()
+    layers = _paper_stack(MOBILENETV3S, seed=5)
+    r = incremental_dse(layers, hw, 4096.0)
+    pts = set(r.trace) | {(r.resource, r.throughput)}
+    for k in range(len(r.frontier)):
+        assert r.frontier.point(k) in pts

@@ -1,0 +1,150 @@
+"""DP partitioning over the memoized segment frontier table (DESIGN.md §10).
+
+Contracts: exact DP never scores worse than the retained SA baseline on the
+paper CNNs at fixed seed; the segment DSE runs at most once per contiguous
+segment; reconfiguration is charged per switch (P - 1 per batch, none for a
+single resident partition); and the multi-chip TPU mode replaces the switch
+with an ICI boundary-activation transfer.
+"""
+import numpy as np
+import pytest
+from conftest import sparse_cnn_workload as _sparse_layers
+
+import repro.core.dse as dse_mod
+from repro.configs.paper_cnns import (MOBILENETV2, MOBILENETV3L, MOBILENETV3S,
+                                      RESNET18, RESNET50)
+from repro.core.dse import (incremental_dse, partition_pipeline,
+                            partition_pipeline_sa)
+from repro.core.perf_model import ACT_BYTES, FPGAModel, TPUModel
+
+
+KW = dict(n_parts=3, batch=256, reconfig_cycles=1e6, dse_iters=120)
+
+
+@pytest.mark.parametrize("cfg", [RESNET18, MOBILENETV3S],
+                         ids=["resnet18", "mobilenetv3s"])
+def test_dp_never_scores_worse_than_sa(cfg):
+    layers = _sparse_layers(cfg)
+    hw = FPGAModel()
+    dp = partition_pipeline(layers, hw, 4096.0, **KW)
+    sa = partition_pipeline_sa(layers, hw, 4096.0, seed=0, **KW)
+    assert dp.throughput >= sa.throughput * (1 - 1e-12)
+    assert dp.time_per_batch <= sa.time_per_batch * (1 + 1e-12)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cfg", [RESNET50, MOBILENETV2, MOBILENETV3L],
+                         ids=["resnet50", "mobilenetv2", "mobilenetv3l"])
+def test_dp_never_scores_worse_than_sa_slow(cfg):
+    layers = _sparse_layers(cfg)
+    hw = FPGAModel()
+    dp = partition_pipeline(layers, hw, 4096.0, **KW)
+    sa = partition_pipeline_sa(layers, hw, 4096.0, seed=0, **KW)
+    assert dp.throughput >= sa.throughput * (1 - 1e-12)
+
+
+def test_segment_dse_runs_at_most_once_per_contiguous_segment(monkeypatch):
+    layers = _sparse_layers(RESNET18)
+    L = len(layers)
+    calls = []
+    real = incremental_dse
+
+    def counting(seg_layers, hw, budget, **kw):
+        calls.append(tuple(id(l) for l in seg_layers))
+        return real(seg_layers, hw, budget, **kw)
+
+    monkeypatch.setattr(dse_mod, "incremental_dse", counting)
+    r = partition_pipeline(layers, FPGAModel(), 4096.0, **KW)
+    assert len(calls) == len(set(calls))          # once per segment
+    assert len(calls) <= L * (L + 1) // 2          # contiguous segments only
+    assert r.dse_calls == len(calls)
+
+
+def test_single_partition_charges_no_reconfiguration():
+    layers = _sparse_layers(RESNET18)[:8]
+    hw = FPGAModel()
+    one = partition_pipeline(layers, hw, 256.0, n_parts=1, batch=256,
+                             reconfig_cycles=1e12, dse_iters=100)
+    full = incremental_dse(layers, hw, 256.0, max_iters=100)
+    assert one.cuts == []
+    assert one.time_per_batch == 256.0 / full.throughput
+    assert one.part_throughput == [full.throughput]
+
+
+def test_time_per_batch_charges_switches_not_partitions():
+    """P resident partitions -> P - 1 switches per processed batch."""
+    layers = _sparse_layers(RESNET18)
+    r = partition_pipeline(layers, FPGAModel(), 4096.0, **KW)
+    seg_time = sum(r.batch / t for t in r.part_throughput)
+    assert r.time_per_batch == pytest.approx(
+        seg_time + KW["reconfig_cycles"] * len(r.cuts), rel=1e-12)
+    assert len(r.part_throughput) == len(r.cuts) + 1
+    assert len(r.part_designs) == len(r.cuts) + 1
+
+
+def test_huge_reconfig_cost_collapses_to_one_partition():
+    layers = _sparse_layers(RESNET18)[:8]
+    hw = FPGAModel()
+    one = partition_pipeline(layers, hw, 256.0, n_parts=1, batch=256,
+                             dse_iters=100)
+    expensive = partition_pipeline(layers, hw, 256.0, n_parts=2, batch=256,
+                                   reconfig_cycles=1e12, dse_iters=100)
+    assert expensive.cuts == []
+    assert expensive.time_per_batch == one.time_per_batch
+
+
+def test_part_designs_materialize_the_segment_results():
+    layers = _sparse_layers(RESNET18)
+    hw = FPGAModel()
+    r = partition_pipeline(layers, hw, 4096.0, **KW)
+    bounds = [0] + r.cuts + [len(layers)]
+    for (a, b), designs, thr in zip(zip(bounds, bounds[1:]),
+                                    r.part_designs, r.part_throughput):
+        seg = incremental_dse(layers[a:b], hw, 4096.0, max_iters=120)
+        assert designs == seg.designs
+        assert thr == seg.throughput
+
+
+# --------------------------------------------------------------------- #
+# Multi-chip TPU mode
+# --------------------------------------------------------------------- #
+def test_multichip_tpu_partitioning_runs_and_caps_parts():
+    layers = _sparse_layers(RESNET18)
+    tpu = TPUModel(chips=4)
+    r = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=8,
+                           batch=256, dse_iters=120)
+    assert len(r.cuts) + 1 <= tpu.chips       # one partition per chip
+    assert r.time_per_batch > 0 and r.throughput > 0
+    assert 0 < r.steady_throughput
+
+
+def test_multichip_switch_is_ici_transfer_of_boundary_activations():
+    layers = _sparse_layers(RESNET18)
+    tpu = TPUModel(chips=4)
+    r = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=4,
+                           batch=256, dse_iters=120)
+    seg_time = sum(r.batch / t for t in r.part_throughput)
+    ici = sum(tpu.ici_transfer_cycles(r.batch * layers[c - 1].act_out
+                                      * ACT_BYTES) for c in r.cuts)
+    assert r.time_per_batch == pytest.approx(seg_time + ici, rel=1e-12)
+
+
+def test_multichip_steady_rate_bounded_by_parts_and_ici():
+    layers = _sparse_layers(RESNET18)
+    tpu = TPUModel(chips=4)
+    r = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=4,
+                           batch=256, dse_iters=120)
+    assert r.steady_throughput <= min(r.part_throughput) * (1 + 1e-12)
+    for c in r.cuts:
+        hop = tpu.ici_transfer_cycles(float(layers[c - 1].act_out) * ACT_BYTES)
+        assert r.steady_throughput <= 1.0 / hop * (1 + 1e-12)
+
+
+def test_singlechip_tpu_uses_plain_reconfig():
+    layers = _sparse_layers(RESNET18)[:8]
+    tpu = TPUModel(chips=1)
+    r = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=2,
+                           batch=256, reconfig_cycles=1e6, dse_iters=100)
+    seg_time = sum(r.batch / t for t in r.part_throughput)
+    assert r.time_per_batch == pytest.approx(
+        seg_time + 1e6 * len(r.cuts), rel=1e-12)
