@@ -30,10 +30,20 @@ REGISTRY: Dict[str, ModelConfig] = dict(ASSIGNED)
 REGISTRY.update({c.name: c for c in PAPER_CNNS})
 
 
+def _canon(name: str) -> str:
+    """Registry keys use hyphens/dots ("deepseek-v3-671b", "qwen3-0.6b");
+    CLI flags and module names use underscores ("deepseek_v3_671b").
+    Canonicalize to bare alphanumerics so both spellings resolve."""
+    return "".join(ch for ch in name.lower() if ch.isalnum())
+
+
 def get_config(name: str) -> ModelConfig:
-    if name not in REGISTRY:
-        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
-    return REGISTRY[name]
+    if name in REGISTRY:
+        return REGISTRY[name]
+    by_canon = {_canon(k): v for k, v in REGISTRY.items()}
+    if _canon(name) in by_canon:
+        return by_canon[_canon(name)]
+    raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
 
 
 def list_archs(assigned_only: bool = False) -> List[str]:

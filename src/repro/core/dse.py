@@ -412,15 +412,44 @@ def incremental_dse_ref(layers: Sequence[LayerCost], hw: HardwareModel,
 # --------------------------------------------------------------------- #
 @dataclass
 class PartitionResult:
+    """One partitioning of a layer pipeline, with both schedule metrics.
+
+    ``throughput`` is the *amortized temporal* rate: ``batch /
+    time_per_batch`` where ``time_per_batch`` runs the partitions back to
+    back on ONE executor and charges every switch between them — the FPGA
+    reconfiguration schedule of §V-A.4. ``steady_throughput`` is the
+    *spatial steady-state* rate: all partitions resident at once (one per
+    chip), every batch flowing through the full chain, so the pipeline runs
+    at the rate of its slowest stage — ``min`` over partition rates and,
+    multi-chip, the per-sample ICI hop rates at the cuts. The two coincide
+    only for a single partition; see DESIGN.md §10/§11 for when the
+    objectives that optimize them pick different cuts.
+    """
     cuts: List[int]               # split indices (exclusive prefix ends)
     batch: int
     time_per_batch: float         # cycles, incl. switch/transfer overhead
-    throughput: float             # samples/cycle amortized
+    throughput: float             # samples/cycle amortized (temporal)
     part_throughput: List[float] = field(default_factory=list)
     part_designs: List[List[DesignPoint]] = field(default_factory=list)
-    steady_throughput: float = 0.0  # spatial-pipeline rate (multi-chip):
-    #                                 min over partition rates and ICI hops
+    steady_throughput: float = 0.0  # spatial-pipeline rate: min over
+    #                                 partition rates and ICI hop rates
     dse_calls: int = 0            # segment DSE invocations (memoized table)
+    objective: str = "sum"        # DP objective that picked the cuts
+
+
+def boundary_activations(layers: Sequence[LayerCost], cut: int) -> float:
+    """Activation elements per sample crossing a partition cut.
+
+    A sequential pipeline hands ``layers[cut-1].act_out ==
+    layers[cut].act_in`` across the boundary. When the two disagree the
+    smaller side is the stream that actually crosses: LM ``act_in``/
+    ``act_out`` carry per-layer ``n_apply`` multipliers (a MoE down-proj
+    "emits" d_model x active_experts, but the block reduces back to one
+    residual stream of width d_model = the next block's ``act_in``), and a
+    shared-attention block consumes a concat of the d_model stream. Taking
+    ``min`` prices the residual stream, not the intra-block fan-out
+    (DESIGN.md §11)."""
+    return float(min(layers[cut - 1].act_out, layers[cut].act_in))
 
 
 class SegmentTable:
@@ -474,65 +503,161 @@ class SegmentTable:
 def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
                        budget: float, *, n_parts: int, batch: int = 256,
                        reconfig_cycles: float = 5e7, seed: int = 0,
-                       dse_iters: int = 300) -> PartitionResult:
+                       dse_iters: int = 300,
+                       cut_points: Optional[Sequence[int]] = None,
+                       objective: str = "auto") -> PartitionResult:
     """Fold the pipeline into at most ``n_parts`` sequential partitions, each
     run with the full per-partition ``budget``. Exact DP over cut positions
     on a memoized per-segment frontier table (one DSE per contiguous
     segment) — replaces the SA loop, which re-ran the full segment DSE on
     every annealing step (kept as ``partition_pipeline_sa``).
 
-    Reconfiguration accounting: a schedule with P resident partitions
-    charges P - 1 *switches* per processed batch — the mid-batch program
-    transitions. A single resident partition is never reconfigured, and
-    reloading the first partition for the next batch overlaps with host-side
-    batch staging, so neither is charged. On a multi-chip ``TPUModel`` each
+    Switch accounting (temporal schedule, ``time_per_batch``): a schedule
+    with P resident partitions charges exactly P - 1 *switches* per
+    processed batch — the mid-batch program transitions. A single resident
+    partition (P = 1) charges none: it is never reconfigured, and reloading
+    the first partition for the next batch overlaps with host-side batch
+    staging, so neither end of the loop is charged. On a single-chip target
+    a switch costs ``reconfig_cycles`` (FPGA full reconfiguration / TPU mesh
+    program swap); on a multi-chip ``TPUModel`` (``hw.chips > 1``) each
     partition is resident on its own chip and a switch is instead the ICI
     transfer of the whole batch's boundary activations
-    (``TPUModel.ici_transfer_cycles``); ``n_parts`` is additionally capped
-    at ``hw.chips`` and ``steady_throughput`` reports the spatial-pipeline
-    rate (min over partition and ICI-hop rates). The DP may use fewer than
-    ``n_parts`` partitions when a switch costs more than it saves.
-    ``seed`` is accepted for API compatibility with the SA reference and is
-    unused — the DP is deterministic.
+    (``TPUModel.ici_transfer_cycles``), and ``n_parts`` is capped at
+    ``hw.chips``.
+
+    Metrics: ``throughput`` is the amortized *temporal* rate ``batch /
+    time_per_batch`` (partitions time-multiplexed on one executor);
+    ``steady_throughput`` is the *spatial* steady-state rate with every
+    partition resident simultaneously — ``min`` over partition rates and,
+    multi-chip, the per-sample ICI hop rates at the cuts. See the
+    ``PartitionResult`` docstring and DESIGN.md §10/§11.
+
+    ``objective`` selects what the DP optimizes:
+      * ``"sum"``    — minimize ``time_per_batch`` (the sum-form temporal
+        objective; the §V-A.4 reconfiguration schedule).
+      * ``"maxmin"`` — maximize ``steady_throughput`` directly (max-min
+        over stage and ICI-hop rates; multi-chip only, where the spatial
+        schedule is the one actually run). Never worse on
+        ``steady_throughput`` than the sum-form pick over the same cut
+        space, because it exactly maximizes that metric; ties prefer the
+        partition with the smaller ``time_per_batch``.
+      * ``"auto"``   — ``"maxmin"`` for a multi-chip ``TPUModel``,
+        ``"sum"`` otherwise (DESIGN.md §11).
+
+    ``cut_points`` restricts the DP to a candidate set of cut indices
+    (sorted, in ``1..L-1``); ``None`` allows every position. Deep LM stacks
+    pass block boundaries (``perf_model.lm_block_bounds``, optionally
+    thinned by ``thin_cut_points``) — the segment table then holds
+    O(K^2) DSEs for K candidates instead of O(L^2).
+
+    The DP may use fewer than ``n_parts`` partitions when a switch costs
+    more than it saves (or, max-min, when an ICI hop would bottleneck the
+    pipeline). ``seed`` is accepted for API compatibility with the SA
+    reference and is unused — the DP is deterministic.
     """
     L = len(layers)
     multi_chip = isinstance(hw, TPUModel) and hw.chips > 1
-    n_parts = min(n_parts, L, hw.chips) if multi_chip else min(n_parts, L)
+    if objective == "auto":
+        objective = "maxmin" if multi_chip else "sum"
+    if objective not in ("sum", "maxmin"):
+        raise ValueError(f"unknown objective {objective!r}")
+    if objective == "maxmin" and not multi_chip:
+        raise ValueError("objective='maxmin' optimizes the spatial "
+                         "steady-state rate, which only exists for a "
+                         "multi-chip TPUModel (chips > 1)")
+    if cut_points is None:
+        cands = list(range(L + 1))
+    else:
+        cp = sorted(set(int(c) for c in cut_points))
+        if cp and not (1 <= cp[0] and cp[-1] <= L - 1):
+            raise ValueError(f"cut_points must lie in 1..{L - 1}")
+        cands = [0] + cp + [L]
+    m = len(cands)                # candidate boundaries incl. 0 and L
+    n_parts = min(n_parts, m - 1, hw.chips) if multi_chip \
+        else min(n_parts, m - 1)
     n_parts = max(n_parts, 1)
     seg = SegmentTable(layers, hw, budget, batch, dse_iters)
 
     def switch_cost(cut: int) -> float:
         """Cycles charged for the transition at cut position ``cut``."""
         if multi_chip:
-            n_bytes = float(batch) * layers[cut - 1].act_out * ACT_BYTES
+            n_bytes = batch * boundary_activations(layers, cut) * ACT_BYTES
             return hw.ici_transfer_cycles(n_bytes)
         return reconfig_cycles
 
+    def hop_rate(cut: int) -> float:
+        """Samples/cycle one ICI hop sustains at cut position ``cut``."""
+        cyc = hw.ici_transfer_cycles(boundary_activations(layers, cut)
+                                     * ACT_BYTES)
+        return 1.0 / cyc if cyc > 0 else float("inf")
+
     INF = float("inf")
-    # T[p][j]: min cycles for layers[:j] as exactly p partitions + switches
-    T = [[INF] * (L + 1) for _ in range(n_parts + 1)]
-    T[0][0] = 0.0
-    back = [[-1] * (L + 1) for _ in range(n_parts + 1)]
-    for p in range(1, n_parts + 1):
-        # prefixes T[p][j < L] only feed deeper recursions; the last p level
-        # needs the full-pipeline entry alone
-        js = range(p, L + 1) if p < n_parts else (L,)
-        for j in js:
-            for i in range(p - 1, j):
-                if T[p - 1][i] == INF:
-                    continue
-                t = T[p - 1][i] + seg.time(i, j) + \
-                    (switch_cost(i) if i else 0.0)
-                if t < T[p][j]:
-                    T[p][j], back[p][j] = t, i
-    best_p = min(range(1, n_parts + 1), key=lambda p: T[p][L])
+    if objective == "sum":
+        # T[p][b]: min cycles for layers[:cands[b]] as exactly p partitions
+        # (+ their switches); the DP walks candidate boundaries only.
+        T = [[INF] * m for _ in range(n_parts + 1)]
+        T[0][0] = 0.0
+        back = [[-1] * m for _ in range(n_parts + 1)]
+        for p in range(1, n_parts + 1):
+            # prefixes b < m-1 only feed deeper recursions; the last p level
+            # needs the full-pipeline entry alone
+            bs = range(p, m) if p < n_parts else (m - 1,)
+            for b in bs:
+                j = cands[b]
+                for a in range(p - 1, b):
+                    if T[p - 1][a] == INF:
+                        continue
+                    i = cands[a]
+                    t = T[p - 1][a] + seg.time(i, j) + \
+                        (switch_cost(i) if i else 0.0)
+                    if t < T[p][b]:
+                        T[p][b], back[p][b] = t, a
+        best_p = min(range(1, n_parts + 1), key=lambda p: T[p][m - 1])
+        score = [T[p][m - 1] for p in range(n_parts + 1)]
+    else:
+        # R[p][b]: max achievable min-rate (stage rates and internal ICI
+        # hops) for layers[:cands[b]] as exactly p partitions. min() is
+        # associative, so the prefix decomposition is exact; +inf seeds the
+        # empty prefix. First maximizer wins -> deterministic cuts.
+        R = [[-INF] * m for _ in range(n_parts + 1)]
+        R[0][0] = INF
+        back = [[-1] * m for _ in range(n_parts + 1)]
+        for p in range(1, n_parts + 1):
+            bs = range(p, m) if p < n_parts else (m - 1,)
+            for b in bs:
+                j = cands[b]
+                for a in range(p - 1, b):
+                    if R[p - 1][a] == -INF:
+                        continue
+                    i = cands[a]
+                    r = min(R[p - 1][a], seg.throughput(i, j))
+                    if i:
+                        r = min(r, hop_rate(i))
+                    if r > R[p][b]:
+                        R[p][b], back[p][b] = r, a
+        # ties on the steady rate prefer the smaller amortized batch time
+        best_rate = max(R[p][m - 1] for p in range(1, n_parts + 1))
+        tied = [p for p in range(1, n_parts + 1)
+                if R[p][m - 1] >= best_rate * (1 - 1e-12)]
+
+        def _amortized(p: int) -> float:
+            total, b = 0.0, m - 1
+            for q in range(p, 0, -1):
+                a = back[q][b]
+                total += seg.time(cands[a], cands[b]) + \
+                    (switch_cost(cands[a]) if cands[a] else 0.0)
+                b = a
+            return total
+        best_p = min(tied, key=_amortized)
+        score = None
+
     cuts: List[int] = []
-    j = L
+    b = m - 1
     for p in range(best_p, 0, -1):
-        i = back[p][j]
-        if i > 0:
-            cuts.append(i)
-        j = i
+        a = back[p][b]
+        if a > 0:
+            cuts.append(cands[a])
+        b = a
     cuts.reverse()
     bounds = [0] + cuts + [L]
     part_thr = [seg.throughput(a, b) for a, b in zip(bounds, bounds[1:])]
@@ -540,16 +665,18 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
     steady = min(part_thr) if part_thr else 0.0
     if multi_chip:
         for c in cuts:
-            hop = hw.ici_transfer_cycles(float(layers[c - 1].act_out)
-                                         * ACT_BYTES)   # cycles/sample
-            steady = min(steady, 1.0 / hop if hop > 0 else steady)
-    total = T[best_p][L]
+            steady = min(steady, hop_rate(c))
+    total = sum(seg.time(a, b) for a, b in zip(bounds, bounds[1:])) + \
+        sum(switch_cost(c) for c in cuts)
+    if objective == "sum":
+        assert abs(total - score[best_p]) <= 1e-9 * max(total, 1.0)
     return PartitionResult(cuts=cuts, batch=batch, time_per_batch=total,
                            throughput=batch / total if total > 0 else 0.0,
                            part_throughput=part_thr,
                            part_designs=part_designs,
                            steady_throughput=steady,
-                           dse_calls=seg.dse_calls)
+                           dse_calls=seg.dse_calls,
+                           objective=objective)
 
 
 def partition_pipeline_sa(layers: Sequence[LayerCost], hw: HardwareModel,

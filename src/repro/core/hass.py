@@ -21,7 +21,8 @@ import numpy as np
 from repro.core import pruning
 from repro.core.dse import incremental_dse
 from repro.core.perf_model import (FPGAModel, HardwareModel, LayerCost,
-                                   pair_sparsity)
+                                   TPUModel, lm_layer_costs, pair_sparsity,
+                                   tile_quantize_sparsity)
 from repro.core.tpe import TPE
 
 
@@ -139,6 +140,162 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
     finally:
         if sync_lam:
             evaluate.lambdas = old_lam
+
+
+# --------------------------------------------------------------------- #
+# LM evaluator (the TPU-side setting: deep lm_layer_costs stacks, analytic
+# Eq. 6 scoring — DESIGN.md §11)
+# --------------------------------------------------------------------- #
+def _gaussian_energy_curve(n_grid: int = 257, n_draws: int = 1 << 15,
+                           seed: int = 0) -> np.ndarray:
+    """``curve[k]`` = fraction of L2 weight energy removed by magnitude-
+    pruning the smallest ``k/(n_grid-1)`` fraction of an i.i.d. Gaussian
+    weight tensor. Computed once from a fixed-seed sample (no scipy in the
+    container, so no closed-form erfinv); interpolated by the evaluator."""
+    w2 = np.sort(np.random.default_rng(seed).standard_normal(n_draws) ** 2)
+    cum = np.concatenate([[0.0], np.cumsum(w2)]) / w2.sum()
+    return np.interp(np.linspace(0.0, 1.0, n_grid),
+                     np.arange(n_draws + 1) / n_draws, cum)
+
+
+@dataclass
+class LMEvaluator:
+    """Eq. 6 metric dict for one sparsity proposal on an LM layer stack.
+
+    The LM path is fully *analytic* (DESIGN.md §11): there are no 671B
+    weights in-container, so instead of prune-and-forward the evaluator
+    scores
+
+      * ``acc``  — an energy-based proxy: ``exp(-alpha * E)`` where ``E`` is
+        the weight-fraction-weighted L2 energy removed by pruning, summed
+        over prunable layers. Element-wise magnitude pruning on a Gaussian
+        tensor removes the ``_gaussian_energy_curve`` fraction; a
+        tile-structured pruner (TPU backend) removes energy ~ proportionally
+        to the tile fraction. Monotone decreasing in every sparsity target.
+      * ``spa``  — weight-count-weighted mean of (s_w + s_a)/2 (the CNN
+        evaluator's convention).
+      * ``thr``/``thr_norm``/``dsp``/``eff`` — exactly the CNN path: ONE
+        ``incremental_dse`` over the sparse stack, Eq. 6-optimal frontier
+        point (λthr·thr_norm − λdsp·dsp) under the budget.
+
+    On a ``TPUModel`` the searched target is realized tile-granularly:
+    ``s_w`` snaps to the largest achievable whole-tile fraction
+    (``tile_quantize_sparsity``) and drives ``s_w_tile`` — the MXU skips
+    whole tiles only (DESIGN.md §6). Activation sparsity never skips MXU
+    compute, so on TPU ``s_a`` costs accuracy without buying throughput;
+    searches there usually run ``include_act=False``.
+
+    ``tie="kind"`` shares one search variable across all blocks per matrix
+    kind (wq/wo/moe_up/..., ~10 variables for a 550-entry stack — the TPE
+    stays low-dimensional on hundreds-of-matmul pipelines); ``tie="none"``
+    searches every prunable layer independently, the paper's CNN granularity.
+    ``n_search`` is the per-(s_w|s_a) dimension callers pass to
+    ``hass_search``.
+    """
+    cfg: object
+    hw: HardwareModel
+    budget: float
+    seq_len: int = 1              # sample = token; seq_len scales attn only
+    dse_iters: int = 300
+    tie: str = "kind"             # kind | none
+    alpha: float = 4.0            # acc-proxy decay per unit energy removed
+    act_weight: float = 0.5       # relative acc cost of activation clipping
+    lambdas: Lambdas = field(default_factory=Lambdas)
+
+    def __post_init__(self):
+        if self.tie not in ("kind", "none"):
+            raise ValueError(f"unknown tie mode {self.tie!r}")
+        self.layers = lm_layer_costs(self.cfg, seq_len=self.seq_len)
+        self.prunable = [l for l in self.layers if l.prunable]
+        kinds: List[str] = []
+        self._group: List[int] = []      # prunable-layer -> search variable
+        for l in self.prunable:
+            key = l.name.split(".", 1)[-1] if self.tie == "kind" else l.name
+            if key not in kinds:
+                kinds.append(key)
+            self._group.append(kinds.index(key))
+        self.group_names = kinds
+        self.n_search = len(kinds)
+        self.tiled = isinstance(self.hw, TPUModel)
+        self._energy = _gaussian_energy_curve()
+        wc = np.array([l.weight_count for l in self.prunable], dtype=np.float64)
+        self._wfrac = wc / max(wc.sum(), 1.0)
+        dense = incremental_dse(self.layers, self.hw, self.budget,
+                                max_iters=self.dse_iters)
+        self.dense_thr = dense.throughput * self.hw.freq
+
+    # ------------------------------------------------------------------ #
+    def _split(self, x: np.ndarray):
+        """Search vector -> per-prunable-layer (s_w, s_a) targets."""
+        g = np.asarray(self._group)
+        x = np.asarray(x, dtype=np.float64)
+        s_w = x[:self.n_search][g]
+        s_a = x[self.n_search:2 * self.n_search][g] \
+            if len(x) >= 2 * self.n_search else np.zeros(len(g))
+        return s_w, s_a
+
+    def sparse_layers(self, x: np.ndarray) -> List[LayerCost]:
+        """The sparse LayerCost stack one proposal realizes (tile-quantized
+        on TPU). Feeds the partitioned multi-chip DP directly."""
+        s_w, s_a = self._split(x)
+        out: List[LayerCost] = []
+        i = 0
+        for l in self.layers:
+            if not l.prunable:
+                out.append(l)
+                continue
+            sw, sa = float(s_w[i]), float(s_a[i])
+            i += 1
+            if self.tiled:
+                sw = tile_quantize_sparsity(sw, l.m_dot, l.weight_count)
+                out.append(LayerCost(**{**l.__dict__, "s_w": sw, "s_a": sa,
+                                        "s_w_tile": sw}))
+            else:
+                out.append(LayerCost(**{**l.__dict__, "s_w": sw, "s_a": sa}))
+        return out
+
+    def _hw_terms(self, res: np.ndarray, thr: np.ndarray):
+        """Identical shape to ``CNNEvaluator._hw_terms`` (log-compressed
+        speedup vs the dense-stack DSE; dsp = resource fraction)."""
+        thr_s = thr * self.hw.freq
+        thr_norm = np.log2(1.0 + thr_s / max(self.dense_thr, 1e-9)) / 4.0
+        return thr_s, thr_norm, res / max(self.budget, 1e-9)
+
+    def _eq6_hw_score(self, res: np.ndarray, thr: np.ndarray) -> np.ndarray:
+        _, thr_norm, dsp = self._hw_terms(res, thr)
+        return self.lambdas.thr * thr_norm - self.lambdas.dsp * dsp
+
+    def __call__(self, x: np.ndarray) -> Dict[str, float]:
+        layers = self.sparse_layers(x)
+        sparse = [l for l in layers if l.prunable]
+        sw = np.array([l.s_w for l in sparse])
+        sa = np.array([l.s_a for l in sparse])
+        # energy removed: tile pruning drops whole tiles (~uniform energy ->
+        # fraction == sw); element pruning drops the smallest-|w| tail
+        e_w = sw if self.tiled else \
+            np.interp(sw, np.linspace(0.0, 1.0, len(self._energy)),
+                      self._energy)
+        e_a = np.interp(sa, np.linspace(0.0, 1.0, len(self._energy)),
+                        self._energy)
+        acc = float(np.exp(-self.alpha *
+                           np.dot(self._wfrac, e_w + self.act_weight * e_a)))
+        spa = float(np.dot(self._wfrac, (sw + sa) / 2.0))
+        dse = incremental_dse(layers, self.hw, self.budget,
+                              max_iters=self.dse_iters)
+        f = dse.frontier
+        k = f.select(self._eq6_hw_score)
+        thr_pts, thr_norm_pts, dsp_pts = self._hw_terms(f.res, f.thr)
+        return {"acc": acc, "spa": spa,
+                "thr": float(thr_pts[k]),
+                "thr_norm": float(thr_norm_pts[k]),
+                "dsp": float(dsp_pts[k]),
+                "eff": float(thr_pts[k]) / max(float(f.res[k]), 1e-9)}
+
+    def evaluate_batch(self, xs: Sequence[np.ndarray]) -> List[Dict[str, float]]:
+        """Analytic path: no forward pass to vmap, so a batch is a plain
+        loop — the hook exists so ``hass_search(batch_size=...)`` amortizes
+        TPE modeling cost over each batch identically to the CNN path."""
+        return [self(x) for x in xs]
 
 
 # --------------------------------------------------------------------- #

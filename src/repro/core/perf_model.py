@@ -305,6 +305,45 @@ def lm_layer_costs(cfg: ModelConfig, seq_len: int = 1,
     return out
 
 
+def lm_block_bounds(layers: Sequence[LayerCost]) -> List[int]:
+    """Block boundaries of an ``lm_layer_costs`` stack: the indices ``k``
+    where ``layers[k]`` starts a new transformer block (the ``l{i}.`` name
+    prefix changes; ``unembed`` is its own block). These are the natural cut
+    positions for partitioning an LM pipeline across chips — a cut inside a
+    block would split a residual stream mid-layer (DESIGN.md §11)."""
+    bounds: List[int] = []
+    prev = None
+    for k, l in enumerate(layers):
+        tag = l.name.split(".", 1)[0]
+        if tag != prev:
+            if k:
+                bounds.append(k)
+            prev = tag
+    return bounds
+
+
+def thin_cut_points(bounds: Sequence[int], max_cuts: int) -> List[int]:
+    """Evenly subsample candidate cut positions down to ``max_cuts`` (keeps
+    the DP's segment table at O(max_cuts^2) DSEs on deep LM stacks)."""
+    bounds = list(bounds)
+    if max_cuts <= 0 or len(bounds) <= max_cuts:
+        return bounds
+    idx = np.linspace(0, len(bounds) - 1, max_cuts).round().astype(int)
+    return [bounds[i] for i in sorted(set(int(i) for i in idx))]
+
+
+def tile_quantize_sparsity(s_w: float, m_dot: int, weight_count: int) -> float:
+    """Largest achievable tile-granular sparsity <= ``s_w`` for a weight
+    matrix of shape (m_dot, weight_count/m_dot) pruned in whole 128x128
+    tiles. The MXU can only skip all-zero 128-aligned tiles (DESIGN.md §6),
+    so a tile-structured pruner realizes sparsity in steps of 1/n_tiles."""
+    if weight_count <= 0 or m_dot <= 0:
+        return 0.0
+    cout = max(1, weight_count // m_dot)
+    n_tiles = math.ceil(m_dot / MXU_TILE) * math.ceil(cout / MXU_TILE)
+    return math.floor(min(max(s_w, 0.0), 1.0) * n_tiles) / n_tiles
+
+
 def param_count(cfg: ModelConfig) -> int:
     total = sum(l.weight_count for l in lm_layer_costs(cfg)) \
         if cfg.family != "cnn" else sum(l.weight_count for l in cnn_layer_costs(cfg))

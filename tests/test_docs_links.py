@@ -1,0 +1,42 @@
+"""Docs stay navigable: intra-repo links in README.md / DESIGN.md resolve
+(the CI gate runs ``tools/check_links.py``; this keeps tier-1 covering it).
+"""
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(ROOT, "tools"))
+
+from check_links import check_file, github_slug  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+
+@pytest.mark.parametrize("doc", ["README.md", "DESIGN.md"])
+def test_intra_repo_links_resolve(doc):
+    path = Path(ROOT) / doc
+    assert path.exists()
+    assert check_file(path) == []
+
+
+def test_github_slug_rule():
+    assert github_slug("§11 LM workload model") == "11-lm-workload-model"
+    assert github_slug("Repo map") == "repo-map"
+    assert github_slug("§10 Pareto-frontier DSE: frontier-native search, "
+                       "DP partitioning, multi-chip TPU") == \
+        ("10-pareto-frontier-dse-frontier-native-search-"
+         "dp-partitioning-multi-chip-tpu")
+    assert github_slug("`code` and *emph*") == "code-and-emph"
+
+
+def test_checker_flags_broken_links(tmp_path):
+    md = tmp_path / "doc.md"
+    md.write_text("# Title\n[ok](doc.md)\n[missing](nope.md)\n"
+                  "[bad anchor](doc.md#not-a-heading)\n[good](#title)\n"
+                  "[O(K^2) caret text](gone.md)\n")
+    errors = check_file(md)
+    assert len(errors) == 3
+    assert any("nope.md" in e for e in errors)
+    assert any("not-a-heading" in e for e in errors)
+    assert any("gone.md" in e for e in errors)

@@ -1,0 +1,272 @@
+"""LM-stack DSE pipeline: analytic ``LMEvaluator`` + max-min multi-chip DP
+(DESIGN.md §11).
+
+The load-bearing contracts:
+  * the max-min DP's partition is never worse on ``steady_throughput`` than
+    the sum-form DP's pick, across randomized LM stacks (the acceptance
+    property of the LM-workload PR);
+  * on small stacks the max-min DP equals brute-force enumeration of every
+    cut subset (it is exact, not just better);
+  * ``cut_points`` restricts the DP without changing its accounting;
+  * the ``LMEvaluator`` produces valid Eq. 6 metric dicts, tile-quantized
+    sparsity on TPU, and runs end-to-end through ``hass_search``.
+"""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduce_config
+from repro.core.dse import (boundary_activations, incremental_dse,
+                            partition_pipeline)
+from repro.core.hass import LMEvaluator, hass_search
+from repro.core.perf_model import (ACT_BYTES, FPGAModel, TPUModel,
+                                   lm_block_bounds, lm_layer_costs,
+                                   thin_cut_points, tile_quantize_sparsity)
+
+LM_ARCHS = ["qwen3-0.6b", "mixtral-8x7b", "deepseek-v3-671b", "zamba2-1.2b",
+            "rwkv6-1.6b"]
+
+
+def sparse_lm_stack(arch: str, seed: int, reduced: bool = True):
+    cfg = get_config(arch)
+    layers = lm_layer_costs(reduce_config(cfg) if reduced else cfg,
+                            seq_len=128)
+    rng = np.random.default_rng(seed)
+    for l in layers:
+        if l.prunable:
+            l.s_w = l.s_w_tile = float(rng.uniform(0.0, 0.8))
+    return layers
+
+
+def steady_rate(layers, tpu, budget, cuts, dse_iters):
+    """Spatial steady-state rate of one explicit partitioning: min over
+    per-segment DSE rates and per-cut ICI hop rates."""
+    bounds = [0] + list(cuts) + [len(layers)]
+    rate = min(incremental_dse(layers[a:b], tpu, budget,
+                               max_iters=dse_iters).throughput
+               for a, b in zip(bounds, bounds[1:]))
+    for c in cuts:
+        hop = tpu.ici_transfer_cycles(boundary_activations(layers, c)
+                                      * ACT_BYTES)
+        rate = min(rate, 1.0 / hop)
+    return rate
+
+
+# --------------------------------------------------------------------- #
+# max-min DP vs sum-form DP
+# --------------------------------------------------------------------- #
+@settings(max_examples=10, deadline=None)
+@given(arch=st.sampled_from(LM_ARCHS), seed=st.integers(0, 10 ** 6),
+       chips=st.integers(2, 5))
+def test_property_maxmin_never_worse_than_sum_on_steady(arch, seed, chips):
+    """The acceptance property: across randomized LM stacks the max-min
+    DP's partition is never worse in ``steady_throughput`` than the
+    sum-form DP's partition (same cut space, same segment table)."""
+    layers = sparse_lm_stack(arch, seed)
+    tpu = TPUModel(chips=chips)
+    cuts = lm_block_bounds(layers)
+    kw = dict(n_parts=chips, batch=32, dse_iters=80, cut_points=cuts)
+    mm = partition_pipeline(layers, tpu, tpu.chip_budget,
+                            objective="maxmin", **kw)
+    sm = partition_pipeline(layers, tpu, tpu.chip_budget,
+                            objective="sum", **kw)
+    assert mm.steady_throughput >= sm.steady_throughput * (1 - 1e-12)
+    assert mm.objective == "maxmin" and sm.objective == "sum"
+    # and the sum-form pick still minimizes the amortized batch time
+    assert sm.time_per_batch <= mm.time_per_batch * (1 + 1e-12)
+
+
+def test_maxmin_equals_bruteforce_on_small_stack():
+    """Exactness: on a small stack the DP's steady rate matches exhaustive
+    enumeration of every cut subset within the candidate set."""
+    layers = sparse_lm_stack("qwen3-0.6b", seed=3)[:18]
+    tpu = TPUModel(chips=3)
+    cands = list(range(1, len(layers)))
+    dse_iters = 60
+    r = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=3,
+                           batch=32, dse_iters=dse_iters, cut_points=cands,
+                           objective="maxmin")
+    best = max(
+        steady_rate(layers, tpu, tpu.chip_budget, c, dse_iters)
+        for k in range(3)
+        for c in itertools.combinations(cands, k))
+    assert r.steady_throughput == pytest.approx(best, rel=1e-12)
+
+
+def test_maxmin_steady_matches_its_own_partition():
+    layers = sparse_lm_stack("mixtral-8x7b", seed=0)
+    tpu = TPUModel(chips=4)
+    r = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=4,
+                           batch=32, dse_iters=80,
+                           cut_points=lm_block_bounds(layers),
+                           objective="maxmin")
+    assert r.steady_throughput == pytest.approx(
+        steady_rate(layers, tpu, tpu.chip_budget, r.cuts, 80), rel=1e-12)
+    # switch accounting is unchanged: P-1 ICI transfers per batch, priced
+    # at the residual stream that crosses each cut
+    seg_time = sum(r.batch / t for t in r.part_throughput)
+    ici = sum(tpu.ici_transfer_cycles(r.batch * boundary_activations(layers, c)
+                                      * ACT_BYTES) for c in r.cuts)
+    assert r.time_per_batch == pytest.approx(seg_time + ici, rel=1e-12)
+
+
+def test_maxmin_requires_multi_chip():
+    layers = sparse_lm_stack("qwen3-0.6b", seed=0)[:10]
+    with pytest.raises(ValueError, match="maxmin"):
+        partition_pipeline(layers, FPGAModel(), 512.0, n_parts=2,
+                           objective="maxmin")
+    with pytest.raises(ValueError, match="maxmin"):
+        partition_pipeline(layers, TPUModel(chips=1), 512.0, n_parts=2,
+                           objective="maxmin")
+    with pytest.raises(ValueError, match="objective"):
+        partition_pipeline(layers, TPUModel(chips=2), 512.0, n_parts=2,
+                           objective="bogus")
+
+
+def test_auto_objective_picks_maxmin_only_for_multichip():
+    layers = sparse_lm_stack("qwen3-0.6b", seed=1)[:12]
+    multi = partition_pipeline(layers, TPUModel(chips=2), 512.0, n_parts=2,
+                               batch=32, dse_iters=60)
+    single = partition_pipeline(layers, TPUModel(chips=1), 512.0, n_parts=2,
+                                batch=32, dse_iters=60)
+    fpga = partition_pipeline(layers, FPGAModel(), 512.0, n_parts=2,
+                              batch=32, dse_iters=60)
+    assert multi.objective == "maxmin"
+    assert single.objective == "sum" and fpga.objective == "sum"
+
+
+def test_cut_points_restrict_the_dp():
+    layers = sparse_lm_stack("qwen3-0.6b", seed=2)
+    cands = thin_cut_points(lm_block_bounds(layers), 6)
+    tpu = TPUModel(chips=4)
+    r = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=4,
+                           batch=32, dse_iters=80, cut_points=cands)
+    assert set(r.cuts) <= set(cands)
+    assert len(r.cuts) + 1 <= tpu.chips
+    # K candidates -> at most K(K+1)/2 segment DSEs, far below L(L+1)/2
+    K = len(cands) + 1
+    assert r.dse_calls <= K * (K + 1) // 2
+    with pytest.raises(ValueError, match="cut_points"):
+        partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=2,
+                           cut_points=[0, 5])
+    with pytest.raises(ValueError, match="cut_points"):
+        partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=2,
+                           cut_points=[len(layers)])
+
+
+def test_sum_dp_with_cut_points_matches_unrestricted_on_free_cut_space():
+    """With every position allowed, the candidate-set DP reproduces the
+    unrestricted DP exactly (the pre-LM behavior is unchanged)."""
+    layers = sparse_lm_stack("qwen3-0.6b", seed=4)[:14]
+    hw = FPGAModel()
+    kw = dict(n_parts=3, batch=64, reconfig_cycles=1e5, dse_iters=60)
+    free = partition_pipeline(layers, hw, 2048.0, **kw)
+    full = partition_pipeline(layers, hw, 2048.0,
+                              cut_points=list(range(1, len(layers))), **kw)
+    assert free.cuts == full.cuts
+    assert free.time_per_batch == full.time_per_batch
+
+
+def test_boundary_activations_price_the_residual_stream():
+    """A MoE block's last matmul 'emits' d_model x active_experts, but only
+    one residual stream of width d_model crosses a block cut — the ICI cost
+    must not inherit the intra-block n_apply fan-out."""
+    cfg = get_config("deepseek-v3-671b")
+    layers = lm_layer_costs(cfg)
+    for c in lm_block_bounds(layers):
+        assert boundary_activations(layers, c) == cfg.d_model
+        assert layers[c - 1].act_out > cfg.d_model   # moe_down fan-out
+    # sequential handoffs (the CNN case) are priced at the actual tensor
+    assert boundary_activations(layers, 1) == \
+        min(layers[0].act_out, layers[1].act_in)
+
+
+# --------------------------------------------------------------------- #
+# LMEvaluator
+# --------------------------------------------------------------------- #
+def _tpu_evaluator(arch="qwen3-0.6b", **kw):
+    tpu = TPUModel()
+    return LMEvaluator(get_config(arch), tpu, tpu.budget, dse_iters=120,
+                       **kw)
+
+
+def test_lm_evaluator_metric_dict_is_valid():
+    ev = _tpu_evaluator()
+    m = ev(np.full(ev.n_search, 0.4))
+    assert set(m) >= {"acc", "spa", "thr", "thr_norm", "dsp", "eff"}
+    assert 0.0 < m["acc"] <= 1.0
+    assert 0.0 <= m["spa"] < 1.0
+    assert m["thr"] > 0 and m["dsp"] > 0
+
+
+def test_lm_evaluator_dense_proposal_is_lossless():
+    ev = _tpu_evaluator()
+    m = ev(np.zeros(ev.n_search))
+    assert m["acc"] == 1.0 and m["spa"] == 0.0
+
+
+def test_lm_evaluator_sparsity_tradeoff_is_monotone():
+    """More sparsity: never more accuracy, never less modeled throughput."""
+    ev = _tpu_evaluator()
+    lo = ev(np.full(ev.n_search, 0.2))
+    hi = ev(np.full(ev.n_search, 0.7))
+    assert hi["acc"] <= lo["acc"]
+    assert hi["thr"] >= lo["thr"]
+    assert hi["spa"] > lo["spa"]
+
+
+def test_lm_evaluator_tpu_sparsity_is_tile_quantized():
+    ev = _tpu_evaluator()
+    layers = ev.sparse_layers(np.full(ev.n_search, 0.37))
+    assert any(l.prunable for l in layers)
+    for l in layers:
+        if l.prunable:
+            assert l.s_w == l.s_w_tile
+            assert l.s_w == tile_quantize_sparsity(0.37, l.m_dot,
+                                                   l.weight_count)
+        else:
+            assert l.s_w_tile == 0.0
+
+
+def test_lm_evaluator_fpga_keeps_element_sparsity():
+    ev = LMEvaluator(get_config("qwen3-0.6b"), FPGAModel(), 4096.0,
+                     dse_iters=120)
+    layers = ev.sparse_layers(np.full(ev.n_search, 0.37))
+    for l in layers:
+        if l.prunable:
+            assert l.s_w == 0.37 and l.s_w_tile == 0.0
+
+
+def test_lm_evaluator_tie_modes():
+    ev_kind = _tpu_evaluator(tie="kind")
+    ev_none = _tpu_evaluator(tie="none")
+    assert ev_kind.n_search == len(set(ev_kind.group_names))
+    assert ev_kind.n_search < ev_none.n_search
+    assert ev_none.n_search == len(ev_none.prunable)
+    with pytest.raises(ValueError, match="tie"):
+        _tpu_evaluator(tie="blocks")
+    # tied expansion broadcasts one target to every block's same-kind matmul
+    x = np.arange(ev_kind.n_search, dtype=float) / (2 * ev_kind.n_search)
+    s_w, _ = ev_kind._split(x)
+    for l, s in zip(ev_kind.prunable, s_w):
+        kind = l.name.split(".", 1)[-1]
+        assert s == x[ev_kind.group_names.index(kind)]
+
+
+def test_hass_search_runs_end_to_end_on_lm_evaluator():
+    ev = _tpu_evaluator("zamba2-1.2b")
+    res = hass_search(ev, ev.n_search, iters=6, include_act=False,
+                      batch_size=3, seed=0)
+    assert len(res.trials) == 6
+    assert np.isfinite(res.best_score)
+    assert res.best_metrics["acc"] > 0
+    # the best proposal's stack feeds the multi-chip DP directly
+    layers = ev.sparse_layers(res.best_x)
+    tpu = TPUModel(chips=2)
+    r = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=2,
+                           batch=16, dse_iters=60,
+                           cut_points=thin_cut_points(
+                               lm_block_bounds(layers), 6))
+    assert r.steady_throughput > 0

@@ -13,8 +13,8 @@ from conftest import sparse_cnn_workload as _sparse_layers
 import repro.core.dse as dse_mod
 from repro.configs.paper_cnns import (MOBILENETV2, MOBILENETV3L, MOBILENETV3S,
                                       RESNET18, RESNET50)
-from repro.core.dse import (incremental_dse, partition_pipeline,
-                            partition_pipeline_sa)
+from repro.core.dse import (boundary_activations, incremental_dse,
+                            partition_pipeline, partition_pipeline_sa)
 from repro.core.perf_model import ACT_BYTES, FPGAModel, TPUModel
 
 
@@ -124,7 +124,7 @@ def test_multichip_switch_is_ici_transfer_of_boundary_activations():
     r = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=4,
                            batch=256, dse_iters=120)
     seg_time = sum(r.batch / t for t in r.part_throughput)
-    ici = sum(tpu.ici_transfer_cycles(r.batch * layers[c - 1].act_out
+    ici = sum(tpu.ici_transfer_cycles(r.batch * boundary_activations(layers, c)
                                       * ACT_BYTES) for c in r.cuts)
     assert r.time_per_batch == pytest.approx(seg_time + ici, rel=1e-12)
 
@@ -136,7 +136,8 @@ def test_multichip_steady_rate_bounded_by_parts_and_ici():
                            batch=256, dse_iters=120)
     assert r.steady_throughput <= min(r.part_throughput) * (1 + 1e-12)
     for c in r.cuts:
-        hop = tpu.ici_transfer_cycles(float(layers[c - 1].act_out) * ACT_BYTES)
+        hop = tpu.ici_transfer_cycles(boundary_activations(layers, c)
+                                      * ACT_BYTES)
         assert r.steady_throughput <= 1.0 / hop * (1 + 1e-12)
 
 

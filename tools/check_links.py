@@ -1,0 +1,81 @@
+"""Intra-repo markdown link checker (CI gate for README.md / DESIGN.md).
+
+Checks every inline markdown link ``[text](target)`` whose target is not an
+external URL:
+
+  * relative file targets must exist (resolved against the markdown file's
+    directory);
+  * ``#anchor`` fragments (same-file or on a relative target) must match a
+    heading in the referenced file, using GitHub's slug rule (lowercase,
+    punctuation stripped, spaces -> hyphens).
+
+    python tools/check_links.py README.md DESIGN.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links; trailing ) of the construct excluded from the target
+LINK_RE = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase; drop everything but alphanumerics,
+    spaces and hyphens (markdown emphasis/code markers included); then
+    spaces -> hyphens."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = "".join(ch for ch in h if ch.isalnum() or ch in " -")
+    return h.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set:
+    return {github_slug(m.group(1))
+            for m in HEADING_RE.finditer(md_path.read_text())}
+
+
+def check_file(md_path: Path) -> list:
+    errors = []
+    for m in LINK_RE.finditer(md_path.read_text()):
+        target = m.group(1)
+        if target.startswith(EXTERNAL):
+            continue
+        path_part, _, frag = target.partition("#")
+        dest = md_path if not path_part \
+            else (md_path.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md_path}: broken link target {target!r} "
+                          f"(no such file {path_part!r})")
+            continue
+        if frag:
+            if dest.suffix.lower() not in (".md", ".markdown"):
+                continue                      # anchors into code: not checked
+            if github_slug(frag) not in anchors_of(dest):
+                errors.append(f"{md_path}: broken anchor {target!r} "
+                              f"(no heading slugs to {frag!r} in {dest.name})")
+    return errors
+
+
+def main(argv) -> int:
+    files = [Path(a) for a in argv] or [Path("README.md"), Path("DESIGN.md")]
+    errors = []
+    n_links = 0
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        n_links += sum(1 for m in LINK_RE.finditer(f.read_text())
+                       if not m.group(1).startswith(EXTERNAL))
+        errors.extend(check_file(f))
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {len(files)} files, {n_links} intra-repo links, "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
