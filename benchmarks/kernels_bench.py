@@ -1,15 +1,47 @@
 """Kernel microbenchmarks (interpret mode on CPU — numbers prove the schedule
 shrinks with sparsity, not TPU wall-time; grid-step counts are the structural
 metric, matching Eq. 1 at tile granularity)."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed
 from repro.kernels import ops
+from repro.kernels.block_sparse_matmul import (_SCHEDULE_CACHE,
+                                               _build_tile_schedule_ref,
+                                               build_tile_schedule)
+
+
+def bench_schedule(seed: int = 0):
+    """Schedule build (vectorized vs per-column-loop reference) and reuse
+    (mask-hash memo hit) — the compile-time arbiter cost per pruned weight."""
+    rng = np.random.default_rng(seed)
+    for kt, nt, density in ((56, 56, 0.5), (112, 112, 0.25)):
+        mask = rng.random((kt, nt)) < density
+        c_ref, i_ref = _build_tile_schedule_ref(mask)
+        _SCHEDULE_CACHE.clear()
+        t0 = time.perf_counter()
+        c, i = build_tile_schedule(mask)
+        t_cold = time.perf_counter() - t0
+        assert np.array_equal(c, c_ref) and np.array_equal(i, i_ref)
+        t0 = time.perf_counter()
+        reps = 50
+        for _ in range(reps):
+            build_tile_schedule(mask)
+        t_hit = (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        _build_tile_schedule_ref(mask)
+        t_ref = time.perf_counter() - t0
+        emit(f"kernel.schedule.{kt}x{nt}", t_cold * 1e6,
+             f"ref={t_ref * 1e6:.0f}us memo_hit={t_hit * 1e6:.1f}us "
+             f"(reuse {t_ref / max(t_hit, 1e-9):.0f}x)")
+        assert t_hit < t_ref, "schedule memo regressed: hit slower than ref"
 
 
 def run(seed: int = 0):
+    bench_schedule(seed)
     rng = np.random.default_rng(seed)
     M = K = N = 256
     x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)

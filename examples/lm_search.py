@@ -40,7 +40,7 @@ def main() -> None:
     import numpy as np
 
     from repro.configs import get_config
-    from repro.core.dse import partition_pipeline
+    from repro.core.dse import DSECache, partition_pipeline
     from repro.core.hass import LMEvaluator, hass_search
     from repro.core.perf_model import (TPUModel, lm_block_bounds,
                                       param_count, thin_cut_points)
@@ -73,8 +73,12 @@ def main() -> None:
         return
     layers = ev.sparse_layers(res.best_x)
     cut_points = thin_cut_points(lm_block_bounds(layers), args.max_cuts)
+    # ONE DSECache across both objectives (and any further what-ifs): the
+    # second DP re-reads every segment frontier instead of re-searching it
+    # (DESIGN.md §12)
+    cache = DSECache()
     kw = dict(n_parts=args.chips, batch=args.pipeline_batch,
-              dse_iters=args.dse_iters, cut_points=cut_points)
+              dse_iters=args.dse_iters, cut_points=cut_points, cache=cache)
     print(f"\npartitioning across {args.chips} chips "
           f"({len(cut_points)} candidate cuts at block boundaries):")
     for objective in ("sum", "maxmin"):
@@ -86,8 +90,11 @@ def main() -> None:
               f"amortized={p.throughput * tpu.freq:8.1f} tok/s "
               f"({p.dse_calls} segment DSEs, "
               f"{time.perf_counter() - t0:.1f}s)")
-    print("  (maxmin maximizes the spatial steady rate directly; "
-        "never worse there than the sum-form pick — DESIGN.md §11)")
+    st = cache.stats()
+    print(f"  shared DSECache: {st['cold_runs']} cold segment DSEs, "
+          f"{st['hits']} exact + {st['warm_hits']} warm reuses "
+          f"(maxmin re-reads the sum DP's frontiers; never worse on the "
+          f"steady rate — DESIGN.md §11/§12)")
 
 
 if __name__ == "__main__":

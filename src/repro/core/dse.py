@@ -67,12 +67,12 @@ class ParetoFrontier:
         return _designs_from(self.spe[k], self.n[k])
 
 
-def _build_frontier(res_pts: List[float], thr_pts: List[float],
-                    states: List[Tuple[List[int], List[int]]]) -> ParetoFrontier:
-    """Skyline of the recorded search path. The last input point is the
-    final (Eq. 4-trimmed) result: it is made the canonical representative of
-    its throughput level (using the DSE's own 1e-9 bottleneck tolerance) so
-    near-duplicate as-searched states never shadow it under ``best_under``."""
+def _frontier_keep(res_pts: List[float], thr_pts: List[float]) -> List[int]:
+    """Skyline indices of the recorded search path. The last input point is
+    the final (Eq. 4-trimmed) result: it is made the canonical representative
+    of its throughput level (using the DSE's own 1e-9 bottleneck tolerance)
+    so near-duplicate as-searched states never shadow it under
+    ``best_under``."""
     f_res, f_thr = res_pts[-1], thr_pts[-1]
     lo, hi = f_thr * (1 - 1e-9), f_thr * (1 + 1e-9)
     idx = [i for i in range(len(res_pts) - 1)
@@ -86,6 +86,12 @@ def _build_frontier(res_pts: List[float], thr_pts: List[float],
         if thr_pts[i] > best:
             keep.append(i)
             best = thr_pts[i]
+    return keep
+
+
+def _build_frontier(res_pts: List[float], thr_pts: List[float],
+                    states: List[Tuple[List[int], List[int]]]) -> ParetoFrontier:
+    keep = _frontier_keep(res_pts, thr_pts)
     L = len(states[-1][0])
     return ParetoFrontier(
         res=np.array([res_pts[i] for i in keep], dtype=np.float64),
@@ -104,6 +110,9 @@ class DSEResult:
     throughput_per_res: float
     trace: List[Tuple[float, float]]  # (resource, throughput) per increment
     frontier: Optional[ParetoFrontier] = None
+    theta_r: float = 0.0          # peak bottleneck rate before the final
+    #                               Eq. 4 trim — the DSECache warm-start
+    #                               certificate bound (DESIGN.md §12)
 
     def images_per_s(self, hw: HardwareModel) -> float:
         return self.throughput * hw.freq
@@ -342,11 +351,354 @@ def _run_incremental(lv: LayerVectors, hw: HardwareModel, budget: float,
     frontier = _build_frontier([r for r, _ in trace] + [res_total],
                                [t for _, t in trace] + [f_thr], states)
     return (np.array(spe, dtype=np.int64), np.array(n, dtype=np.int64),
-            f_thr, res_total, trace, frontier)
+            f_thr, res_total, trace, frontier, theta_r)
+
+
+def _layer_classes(lv: LayerVectors):
+    """Partition layers into dynamics classes: two layers behave bit-
+    identically inside the greedy iff their (macs, m_dot, s_eff, max_n,
+    max_spe, res_unit) tuples are equal — the rate function and resource
+    accounting read nothing else. Returns (C, pos) with ``pos[c]`` the
+    ascending member positions of class ``c`` (first-appearance order).
+    One ``tolist`` per column then a flat dict loop — per-element numpy
+    indexing is the thing to avoid here, not the Python loop."""
+    cols = zip(lv.macs.tolist(), lv.m_dot.tolist(), lv.s_eff.tolist(),
+               lv.max_n.tolist(), lv.max_spe.tolist(), lv.res_unit.tolist())
+    seen: Dict[tuple, int] = {}
+    pos: List[List[int]] = []
+    for i, key in enumerate(cols):
+        c = seen.setdefault(key, len(pos))
+        if c == len(pos):
+            pos.append([])
+        pos[c].append(i)
+    return len(pos), pos
+
+
+def _run_incremental_grouped(lv: LayerVectors, hw: HardwareModel,
+                             budget: float, max_iters: int,
+                             classes=None):
+    """Class-grouped §V-A.3 greedy: bit-identical to ``_run_incremental``
+    but O(G) per iteration instead of O(L), where G is the number of live
+    (class, design-state) groups — deep LM stacks repeat the same ~10 matmul
+    shapes across blocks, so G stays near the class count while L is in the
+    hundreds (DESIGN.md §12).
+
+    Exactness argument: the greedy reads a layer only through its class
+    constants and design state, ties on the rate argmin break by lowest
+    layer position (``thr.index``), and within a class the min-rate group's
+    copies share one state so the winner is the group's first position.
+    Copies therefore split off a group one position at a time in ascending
+    order, keeping every group a contiguous position run; balance shrinks
+    map whole groups identically, and ``res_total`` is accumulated over
+    changed copies in ascending position order — the flat engine's float
+    summation order, term for term."""
+    L = len(lv)
+    C, pos = classes if classes is not None else _layer_classes(lv)
+    macs = [int(lv.macs[pos[c][0]]) for c in range(C)]
+    m_dot = [int(lv.m_dot[pos[c][0]]) for c in range(C)]
+    s_eff = [float(lv.s_eff[pos[c][0]]) for c in range(C)]
+    max_n = [int(lv.max_n[pos[c][0]]) for c in range(C)]
+    max_spe = [int(lv.max_spe[pos[c][0]]) for c in range(C)]
+    unit = [float(lv.res_unit[pos[c][0]]) for c in range(C)]
+
+    ceil = math.ceil
+
+    def thr_of(c: int, s: int, nn: int) -> float:
+        if not macs[c]:
+            return float("inf")
+        t = max(1, ceil((1.0 - s_eff[c]) * m_dot[c] / max(nn, 1)))
+        return s * m_dot[c] / (macs[c] * t)
+
+    # groups: per class, ascending-start list of
+    # [start, cnt, s, n, rate, rate_nh, rate_sh]; positions of a group are
+    # pos[c][start:start+cnt]. rate_nh/rate_sh are the rates after one
+    # n-/spe-halving — maintained so balance entry checks are list reads,
+    # the flat engine's thr_nh/thr_sh trick at group granularity.
+    def _group(c: int, start: int, cnt: int, s: int, nn: int) -> List:
+        return [start, cnt, s, nn, thr_of(c, s, nn),
+                thr_of(c, s, max(1, nn // 2)), thr_of(c, max(1, s // 2), nn)]
+
+    cgroups: List[List[List]] = [[_group(c, 0, len(pos[c]), 1, 1)]
+                                 for c in range(C)]
+    # flat per-layer design mirror, kept in sync with the groups; state
+    # history is a per-row mutation log (``muts``), so a trace row costs
+    # O(changes) instead of O(L) — wave rows change exactly one layer
+    spe_l = [1] * L
+    n_l = [1] * L
+    # exact flat-engine float: sum(res_unit) in ascending position order
+    res_total = float(sum(lv.res_unit.tolist()))
+
+    def scan_min():
+        """(min rate, argmin class, argmin group, strict second) in one
+        pass; rate ties break by lowest member position — exactly the flat
+        engine's ``thr.index(min(thr))``. ``second`` is the min over groups
+        other than the argmin group (== cur on a tie)."""
+        cur = second = math.inf
+        best_c = best_g = None
+        best_pos = L
+        for c in range(C):
+            for g in cgroups[c]:
+                r = g[4]
+                if r < cur:
+                    second = cur
+                    cur, best_c, best_g = r, c, g
+                    best_pos = pos[c][g[0]]
+                elif r == cur:
+                    second = cur
+                    p = pos[c][g[0]]
+                    if p < best_pos:
+                        best_c, best_g, best_pos = c, g, p
+                elif r < second:
+                    second = r
+        return cur, best_c, best_g, second
+
+    def compact(c: int) -> None:
+        gs = cgroups[c]
+        out = [gs[0]]
+        for g in gs[1:]:
+            p = out[-1]
+            if p[2] == g[2] and p[3] == g[3]:
+                p[1] += g[1]
+            else:
+                out.append(g)
+        cgroups[c] = out
+
+    # lazy per-row undo log: class -> its group list at row start; a budget
+    # revert restores exactly the touched classes
+    iter_log: Dict[int, List[List]] = {}
+
+    def touch(c: int) -> None:
+        if c not in iter_log:
+            iter_log[c] = [list(g) for g in cgroups[c]]
+
+    trace: List[Tuple[float, float]] = []
+    muts: List[List[Tuple[int, int, int]]] = []   # per trace row: (p, s, n)
+    undo: List[Tuple[int, int, int]] = []         # current row (p, s, n) old
+
+    def balance(lo: float, skip) -> None:
+        """One Eq. 4–5 pass against fixed ``lo``. ``skip`` is a group object
+        or a set of id(group)s. Shrink chains are per-group (all copies of a
+        group share the decision); the res_total deltas are then applied in
+        ascending copy-position order, replaying the flat engine's float
+        accumulation exactly."""
+        nonlocal res_total
+        updates: List[Tuple[int, float]] = []
+        touched = []
+        skip_set = skip if isinstance(skip, set) else None
+        row = muts[-1]
+        for c in range(C):
+            for g in cgroups[c]:
+                if g is skip or (skip_set and id(g) in skip_set):
+                    continue
+                s, nn = g[2], g[3]
+                if not ((nn > 1 and g[5] >= lo) or (s > 1 and g[6] >= lo)):
+                    continue
+                touch(c)
+                s_i, n_i = s, nn
+                while True:
+                    if n_i > 1 and thr_of(c, s_i, n_i // 2) >= lo:
+                        n_i //= 2
+                        continue
+                    if s_i > 1 and thr_of(c, s_i // 2, n_i) >= lo:
+                        s_i //= 2
+                        continue
+                    break
+                delta = (s_i * n_i - s * nn) * unit[c]
+                for p in pos[c][g[0]:g[0] + g[1]]:
+                    updates.append((p, delta))
+                    undo.append((p, spe_l[p], n_l[p]))
+                    row.append((p, s_i, n_i))
+                    spe_l[p] = s_i
+                    n_l[p] = n_i
+                g[2:] = _group(c, g[0], g[1], s_i, n_i)[2:]
+                touched.append(c)
+        updates.sort()
+        for _, d in updates:
+            res_total += d
+        for c in set(touched):
+            compact(c)
+
+    it = 0
+    broke = False
+    while it < max_iters and not broke:
+        cur_thr, slow_c, slow_g, second = scan_min()
+        s, nn = slow_g[2], slow_g[3]
+        cur_res = s * nn * unit[slow_c]
+        best = None
+        best_score = None
+        if nn < max_n[slow_c]:
+            n2 = min(nn * 2, max_n[slow_c])
+            dres = s * n2 * unit[slow_c] - cur_res
+            best = (s, n2)
+            best_score = (thr_of(slow_c, s, n2) - cur_thr) / max(dres, 1e-9)
+        if s < max_spe[slow_c]:
+            s2 = min(s * 2, max_spe[slow_c])
+            dres = s2 * nn * unit[slow_c] - cur_res
+            score = (thr_of(slow_c, s2, nn) - cur_thr) / max(dres, 1e-9)
+            if best is None or score > best_score:
+                best = (s2, nn)
+        if best is None:
+            trace.append((res_total, cur_thr))
+            muts.append([])
+            break
+        grown_rate = thr_of(slow_c, best[0], best[1])
+        dgrow = (best[0] * best[1] - s * nn) * unit[slow_c]
+        # wave width: while >1 copies lag at the strict minimum and the
+        # grown design strictly improves, every next flat iteration grows
+        # the next lagging copy with the identical decision, the pipeline
+        # minimum stays cur_thr, and the balance pass is a no-op after the
+        # first (same lo, feasibility unchanged) — batch those iterations.
+        # The no-op argument needs the grown design itself to be
+        # unshrinkable at that lo (a ceil-plateau spe-doubling can leave
+        # its n free to halve, which the flat engine's next pass takes)
+        wave = 0
+        if slow_g[1] > 1 and grown_rate > cur_thr and cur_thr < second:
+            lo_wave = cur_thr * (1 + 1e-9)
+            g_nh = thr_of(slow_c, best[0], max(1, best[1] // 2))
+            g_sh = thr_of(slow_c, max(1, best[0] // 2), best[1])
+            if not ((best[1] > 1 and g_nh >= lo_wave) or
+                    (best[0] > 1 and g_sh >= lo_wave)):
+                # batch up to cnt-2 follow-up copies: growing the LAST
+                # lagging copy moves the pipeline minimum, so its balance
+                # pass runs at a different lo — leave it to a normal step
+                wave = min(slow_g[1] - 2, max_iters - it - 1)
+        iter_log.clear()
+        undo.clear()
+        res_before = res_total
+        touch(slow_c)
+        trace.append((res_total, cur_thr))
+        muts.append([])
+        # split the first (lowest-position) copy off the argmin group and
+        # grow it — the flat engine grows exactly that layer index
+        if slow_g[1] == 1:
+            grown = slow_g
+        else:
+            grown = list(slow_g)
+            grown[1] = 1
+            slow_g[0] += 1
+            slow_g[1] -= 1
+            gi = cgroups[slow_c].index(slow_g)
+            cgroups[slow_c].insert(gi, grown)
+        res_total += dgrow
+        grown[2:] = _group(slow_c, grown[0], 1, best[0], best[1])[2:]
+        p_grown = pos[slow_c][grown[0]]
+        undo.append((p_grown, spe_l[p_grown], n_l[p_grown]))
+        muts[-1].append((p_grown, best[0], best[1]))
+        spe_l[p_grown], n_l[p_grown] = best
+        # min(thr) after the growth, without a rescan: growth only raised
+        # the grown copy's rate; the lagging remainder (if any) still sits
+        # at cur_thr, everything else at >= second (exact same floats the
+        # flat engine's fresh min() sees)
+        if grown is slow_g:
+            m_after = second if second < grown_rate else grown_rate
+        else:
+            m_after = cur_thr
+        balance(m_after * (1 + 1e-9), skip=grown)
+        compact(slow_c)
+        it += 1
+        if res_total > budget:
+            for c, gs in iter_log.items():
+                cgroups[c] = gs
+            for p, s_o, n_o in reversed(undo):
+                spe_l[p], n_l[p] = s_o, n_o
+            muts[-1] = []
+            res_total = res_before
+            break
+        if not wave:
+            continue
+        # batched wave steps (flat iterations 2..wave+1 of this run).
+        # compact() may have merged the grown singleton into an adjacent
+        # same-state group (a previous interrupted wave's accumulator), so
+        # re-locate the LIVE group holding the grown copy before mutating
+        start0 = grown[0]
+        acc = None
+        for g in cgroups[slow_c]:
+            if g[0] <= start0 < g[0] + g[1]:
+                acc = g
+                break
+        for _ in range(wave):
+            trace.append((res_total, cur_thr))
+            muts.append([])
+            res_wave = res_total
+            p = pos[slow_c][slow_g[0]]
+            slow_g[0] += 1
+            slow_g[1] -= 1
+            acc[1] += 1
+            res_total += dgrow
+            muts[-1].append((p, best[0], best[1]))
+            spe_l[p], n_l[p] = best
+            it += 1
+            if res_total > budget:
+                slow_g[0] -= 1
+                slow_g[1] += 1
+                acc[1] -= 1
+                spe_l[p], n_l[p] = s, nn
+                muts[-1] = []
+                res_total = res_wave
+                broke = True
+                break
+
+    theta_r = scan_min()[0]
+    hi = theta_r * (1 + 1e-9)
+    protected = {id(g) for gs in cgroups for g in gs if g[4] <= hi}
+    muts.append([])           # final-pass mutations, applied after row T-1
+    undo.clear()
+    balance(theta_r * (1 - 1e-12), skip=protected)
+    f_thr = scan_min()[0]
+
+    # frontier assembly: replay the mutation log once, materializing the
+    # kept rows (row j's state = initial + muts[0..j-1]); the final entry
+    # is the post-trim state, one replay step past the last row
+    res_pts = [r for r, _ in trace] + [res_total]
+    thr_pts = [t for _, t in trace] + [f_thr]
+    keep = _frontier_keep(res_pts, thr_pts)
+    keep_set = set(keep)
+    spe_r = [1] * L
+    n_r = [1] * L
+    kept: Dict[int, Tuple[List[int], List[int]]] = {}
+    last = len(res_pts) - 1
+    for j in range(len(trace)):         # trace rows: state BEFORE muts[j]
+        if j in keep_set:
+            kept[j] = (spe_r.copy(), n_r.copy())
+        for p, s_m, n_m in muts[j]:
+            spe_r[p] = s_m
+            n_r[p] = n_m
+    for p, s_m, n_m in muts[-1]:        # final Eq. 4 pass
+        spe_r[p] = s_m
+        n_r[p] = n_m
+    kept[last] = (spe_r.copy(), n_r.copy())
+    frontier = ParetoFrontier(
+        res=np.array([res_pts[i] for i in keep], dtype=np.float64),
+        thr=np.array([thr_pts[i] for i in keep], dtype=np.float64),
+        spe=np.array([kept[i][0] for i in keep],
+                     dtype=np.int64).reshape(len(keep), L),
+        n=np.array([kept[i][1] for i in keep],
+                   dtype=np.int64).reshape(len(keep), L))
+    return (np.array(spe_l, dtype=np.int64), np.array(n_l, dtype=np.int64),
+            f_thr, res_total, trace, frontier, theta_r)
+
+
+def _run_dse(lv: LayerVectors, hw: HardwareModel, budget: float,
+             max_iters: int, engine: str = "auto"):
+    """Engine dispatch: ``grouped`` when enough layers share a dynamics
+    class to pay for the group bookkeeping, ``flat`` otherwise. Both are
+    bit-exact (property-tested), so ``auto`` is a pure perf choice."""
+    classes = None
+    if engine == "auto":
+        classes = _layer_classes(lv)
+        engine = "grouped" if len(lv) >= 16 and 2 * classes[0] <= len(lv) \
+            else "flat"
+    if engine == "grouped":
+        return _run_incremental_grouped(lv, hw, budget, max_iters,
+                                        classes=classes)
+    if engine != "flat":
+        raise ValueError(f"unknown engine {engine!r}")
+    return _run_incremental(lv, hw, budget, max_iters)
 
 
 def incremental_dse(layers: Sequence[LayerCost], hw: HardwareModel,
-                    budget: float, *, max_iters: int = 10000) -> DSEResult:
+                    budget: float, *, max_iters: int = 10000,
+                    engine: str = "auto") -> DSEResult:
     """§V-A.3: start resource-minimal, grow the slowest layer, re-balance.
 
     Vectorized greedy loop — identical designs/throughput/resource/trace to
@@ -354,13 +706,18 @@ def incremental_dse(layers: Sequence[LayerCost], hw: HardwareModel,
     ``DSEResult.frontier`` holds the full non-dominated (resource,
     throughput) set of the search path with per-point design state, so
     consumers (Eq. 6 scoring, DP partitioning) trade points without
-    re-running the search (``incremental_dse_ref`` leaves it None)."""
+    re-running the search (``incremental_dse_ref`` leaves it None).
+
+    ``engine`` picks the loop implementation: ``"flat"`` is the per-layer
+    engine; ``"grouped"`` collapses layers with identical dynamics into
+    class groups (bit-exact, much faster on deep LM stacks whose blocks
+    repeat the same matmul shapes); ``"auto"`` chooses by class count."""
     lv = hw.layer_vectors(layers)
-    spe, n, thr, res, trace, frontier = _run_incremental(lv, hw, budget,
-                                                         max_iters)
+    spe, n, thr, res, trace, frontier, theta_r = _run_dse(lv, hw, budget,
+                                                          max_iters, engine)
     return DSEResult(designs=_designs_from(spe, n), throughput=thr,
                      resource=res, throughput_per_res=thr / max(res, 1e-9),
-                     trace=trace, frontier=frontier)
+                     trace=trace, frontier=frontier, theta_r=theta_r)
 
 
 def incremental_dse_ref(layers: Sequence[LayerCost], hw: HardwareModel,
@@ -405,6 +762,128 @@ def incremental_dse_ref(layers: Sequence[LayerCost], hw: HardwareModel,
     res = total_res(designs)
     return DSEResult(designs=designs, throughput=thr, resource=res,
                      throughput_per_res=thr / max(res, 1e-9), trace=trace)
+
+
+# --------------------------------------------------------------------- #
+# DSECache: memoized warm-start reuse across DSE calls (DESIGN.md §12)
+# --------------------------------------------------------------------- #
+class DSECache:
+    """Exact result reuse for ``incremental_dse`` across a search session.
+
+    Two reuse levels, both bit-exact (property-tested in
+    ``tests/test_dse_cache.py``):
+
+      * **exact** — results are memoized on the full dynamics key: the
+        ``s_eff`` float vector plus a fingerprint of the workload constants
+        (macs, m_dot, caps, res_unit), budget and max_iters. Equal keys
+        replay the identical greedy trajectory by determinism.
+      * **warm** — the floor-stability theorem: a layer whose design the
+        greedy never grows stays at the resource floor (1, 1) for the whole
+        run (shrinking from the floor is impossible), and it is never grown
+        iff its floor rate strictly exceeds ``theta_r``, the run's peak
+        bottleneck rate. Such a layer contributes a constant to every
+        decision the greedy takes — argmin selection, balance feasibility,
+        budget accounting — so two stacks that differ ONLY in layers that
+        are floor-stable on both sides (rate at (1,1) strictly above the
+        cached run's theta_r under both the cached and the query sparsity)
+        have bit-identical DSE results. The certificate is O(L) per cached
+        anchor, vectorized over all anchors; when it cannot be proven the
+        query falls back to a cold run.
+
+    A cold run is the normal engine (grouped/flat dispatch), so a cache
+    MISS costs one array compare more than no cache at all. Results handed
+    out are shared objects — treat them as immutable.
+    """
+
+    def __init__(self, max_entries: int = 256,
+                 materialize_designs: bool = True):
+        """``materialize_designs=False`` leaves ``DSEResult.designs`` empty
+        on cache-produced results (consumers that only read the frontier —
+        the analytic evaluators — skip building L DesignPoint objects per
+        cold run; ``ParetoFrontier.materialize`` still rebuilds any point)."""
+        self.max_entries = max_entries
+        self.materialize_designs = materialize_designs
+        self.hits = 0
+        self.warm_hits = 0
+        self.cold_runs = 0
+        # fingerprint -> {s_eff bytes -> DSEResult}
+        self._exact: Dict[int, Dict[bytes, DSEResult]] = {}
+        # fingerprint -> [s_eff rows], [rate11 rows], [theta_r], [result]
+        self._anchors: Dict[int, list] = {}
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "warm_hits": self.warm_hits,
+                "cold_runs": self.cold_runs}
+
+    @staticmethod
+    def _fingerprint(lv: LayerVectors, budget: float, max_iters: int) -> int:
+        return hash((lv.macs.tobytes(), lv.m_dot.tobytes(),
+                     lv.max_n.tobytes(), lv.max_spe.tobytes(),
+                     lv.res_unit.tobytes(), float(budget), int(max_iters)))
+
+    @staticmethod
+    def _rate11(lv: LayerVectors) -> np.ndarray:
+        """Per-layer rate at the (1, 1) floor design — the same floats the
+        engines' ``thr_of(i, 1, 1)`` computes."""
+        t = np.maximum(1.0, np.ceil((1.0 - lv.s_eff) * lv.m_dot))
+        with np.errstate(divide="ignore"):
+            r = lv.m_dot / (lv.macs * t)
+        return np.where(lv.macs > 0, r, np.inf)
+
+    def dse_vec(self, lv: LayerVectors, hw: HardwareModel, budget: float,
+                *, max_iters: int = 10000, engine: str = "auto") -> DSEResult:
+        fp = self._fingerprint(lv, budget, max_iters)
+        s_eff = np.ascontiguousarray(lv.s_eff, dtype=np.float64)
+        key = s_eff.tobytes()
+        exact = self._exact.setdefault(fp, {})
+        r = exact.get(key)
+        if r is not None:
+            self.hits += 1
+            return r
+        anchors = self._anchors.setdefault(fp, [[], [], [], []])
+        a_s, a_r11, a_th, a_res = anchors
+        if a_s:
+            q_r11 = self._rate11(lv)
+            S = np.stack(a_s)
+            R = np.stack(a_r11)
+            th = np.asarray(a_th)[:, None]
+            ok = (~(S != s_eff[None]) |
+                  ((R > th) & (q_r11[None] > th))).all(axis=1)
+            idx = np.nonzero(ok)[0]
+            if len(idx):
+                self.warm_hits += 1
+                r = a_res[int(idx[0])]
+                self._insert(fp, s_eff, key, q_r11, r)
+                return r
+        self.cold_runs += 1
+        spe, n, thr, res, trace, frontier, theta_r = _run_dse(
+            lv, hw, budget, max_iters, engine)
+        designs = _designs_from(spe, n) if self.materialize_designs else []
+        r = DSEResult(designs=designs, throughput=thr,
+                      resource=res, throughput_per_res=thr / max(res, 1e-9),
+                      trace=trace, frontier=frontier, theta_r=theta_r)
+        self._insert(fp, s_eff, key, self._rate11(lv), r)
+        return r
+
+    def dse(self, layers: Sequence[LayerCost], hw: HardwareModel,
+            budget: float, *, max_iters: int = 10000,
+            engine: str = "auto") -> DSEResult:
+        """Drop-in cached ``incremental_dse``."""
+        return self.dse_vec(hw.layer_vectors(layers), hw, budget,
+                            max_iters=max_iters, engine=engine)
+
+    def _insert(self, fp: int, s_eff: np.ndarray, key: bytes,
+                rate11: np.ndarray, r: DSEResult) -> None:
+        exact = self._exact[fp]
+        if len(exact) >= self.max_entries:
+            exact.clear()                    # epoch reset: searches are
+            self._anchors[fp] = [[], [], [], []]  # phase-local, old anchors
+        exact[key] = r                       # rarely pay off past the cap
+        a_s, a_r11, a_th, a_res = self._anchors[fp]
+        a_s.append(s_eff)
+        a_r11.append(rate11)
+        a_th.append(r.theta_r)
+        a_res.append(r)
 
 
 # --------------------------------------------------------------------- #
@@ -461,22 +940,34 @@ class SegmentTable:
     how many cut configurations the optimizer considers — unlike SA, whose
     DSE count scales with annealing steps x partitions and which still only
     samples the cut space (DESIGN.md §10).
+
+    A shared ``DSECache`` extends the reuse across *tables*: every
+    ``partition_pipeline`` call in one search session (per chip count, per
+    objective, per proposal) keys its segment DSEs in the same cache, so a
+    segment whose layers' sparsity did not change is never re-searched
+    (DESIGN.md §12).
     """
 
     def __init__(self, layers: Sequence[LayerCost], hw: HardwareModel,
-                 budget: float, batch: int, dse_iters: int):
+                 budget: float, batch: int, dse_iters: int,
+                 cache: Optional[DSECache] = None):
         self.layers = list(layers)
         self.hw, self.budget = hw, budget
         self.batch, self.dse_iters = batch, dse_iters
         self._cache: Dict[Tuple[int, int], ParetoFrontier] = {}
         self.dse_calls = 0
+        self.shared = cache
 
     def frontier(self, i: int, j: int) -> ParetoFrontier:
         key = (i, j)
         if key not in self._cache:
             self.dse_calls += 1
-            r = incremental_dse(self.layers[i:j], self.hw, self.budget,
-                                max_iters=self.dse_iters)
+            if self.shared is not None:
+                r = self.shared.dse(self.layers[i:j], self.hw, self.budget,
+                                    max_iters=self.dse_iters)
+            else:
+                r = incremental_dse(self.layers[i:j], self.hw, self.budget,
+                                    max_iters=self.dse_iters)
             self._cache[key] = r.frontier
         return self._cache[key]
 
@@ -505,7 +996,8 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
                        reconfig_cycles: float = 5e7, seed: int = 0,
                        dse_iters: int = 300,
                        cut_points: Optional[Sequence[int]] = None,
-                       objective: str = "auto") -> PartitionResult:
+                       objective: str = "auto",
+                       cache: Optional[DSECache] = None) -> PartitionResult:
     """Fold the pipeline into at most ``n_parts`` sequential partitions, each
     run with the full per-partition ``budget``. Exact DP over cut positions
     on a memoized per-segment frontier table (one DSE per contiguous
@@ -554,6 +1046,11 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
     more than it saves (or, max-min, when an ICI hop would bottleneck the
     pipeline). ``seed`` is accepted for API compatibility with the SA
     reference and is unused — the DP is deterministic.
+
+    ``cache`` plugs a shared ``DSECache`` into the segment table, so
+    repeated partition calls in one session (chip-count sweeps, sum vs
+    max-min objectives, per-proposal re-partitioning) reuse every segment
+    frontier whose layers did not change (DESIGN.md §12).
     """
     L = len(layers)
     multi_chip = isinstance(hw, TPUModel) and hw.chips > 1
@@ -576,7 +1073,7 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
     n_parts = min(n_parts, m - 1, hw.chips) if multi_chip \
         else min(n_parts, m - 1)
     n_parts = max(n_parts, 1)
-    seg = SegmentTable(layers, hw, budget, batch, dse_iters)
+    seg = SegmentTable(layers, hw, budget, batch, dse_iters, cache=cache)
 
     def switch_cost(cut: int) -> float:
         """Cycles charged for the transition at cut position ``cut``."""

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pruning
-from repro.core.dse import incremental_dse
+from repro.core.dse import DSECache, ParetoFrontier, incremental_dse
 from repro.core.perf_model import (FPGAModel, HardwareModel, LayerCost,
                                    TPUModel, lm_layer_costs, pair_sparsity,
                                    tile_quantize_sparsity)
@@ -66,10 +66,11 @@ class SearchResult:
 def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
                 n_layers: int, *, iters: int = 96,
                 hardware_aware: bool = True,
-                lambdas: Lambdas = Lambdas(),
+                lambdas: Optional[Lambdas] = None,
                 s_max: float = 0.95, seed: int = 0,
                 include_act: bool = True,
-                batch_size: Optional[int] = None) -> SearchResult:
+                batch_size: Optional[int] = None,
+                liar: Optional[str] = "min") -> SearchResult:
     """Search per-layer sparsity targets.
 
     evaluate(x) must return a dict with keys:
@@ -92,7 +93,17 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
     ``evaluate`` — vmap-of-1 and jit numerics may differ in the last float
     bits — so ``batch_size=1`` replays the serial search trial-for-trial at
     a fixed seed for ANY evaluator; ``None`` keeps the serial loop.
+
+    ``liar`` selects the batch proposal protocol (``TPE.ask_batch``):
+    ``"min"`` (default) runs constant-liar parallel TPE — batch members
+    are proposed sequentially against provisional worst-score tells, so one
+    round covers distinct basins instead of resampling one mode
+    (DESIGN.md §12); ``None`` restores the independent-draw batch.
+    ``lambdas`` defaults to a fresh ``Lambdas()`` per call — pass an
+    instance to override Eq. 6 weights (concurrent searches never alias
+    each other's weights).
     """
+    lambdas = Lambdas() if lambdas is None else lambdas
     dim = n_layers * (2 if include_act else 1)
     opt = TPE(lo=np.zeros(dim), hi=np.full(dim, s_max), seed=seed)
     result = SearchResult(best_x=np.zeros(dim), best_score=-np.inf,
@@ -130,7 +141,7 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
         done = 0
         while done < iters:
             k = min(batch_size, iters - done)
-            xs = opt.ask_batch(k)
+            xs = opt.ask_batch(k, liar=liar)
             ms = [dict(m) for m in eval_batch(xs)] \
                 if eval_batch is not None and k > 1 \
                 else [dict(evaluate(x)) for x in xs]
@@ -140,6 +151,50 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
     finally:
         if sync_lam:
             evaluate.lambdas = old_lam
+
+
+def frontier_hw_metrics(ev, f: ParetoFrontier) -> Dict[str, float]:
+    """Eq. 6 hardware terms read off a DSE frontier, shared by both
+    evaluators (DESIGN.md §12).
+
+    ``ev.frontier_mode == "point"``: the pre-PR-4 semantics — score at the
+    single frontier point maximizing λthr·thr_norm − λdsp·dsp.
+
+    ``"budgets"``: per-budget scalarization of the WHOLE frontier. For each
+    deployment budget ``frac·budget`` (``ev.budget_fracs``) take the point
+    actually deployable there (``best_under``) and report the MEAN of the
+    per-budget thr_norm and of the per-budget resource fraction
+    ``res/budget`` (utilization of the AVAILABLE device, the paper's f_dsp
+    — NOT of the frac slice, where every greedy design saturates and the
+    λdsp term stops discriminating between proposals). Eq. 6 is linear in
+    (thr_norm, dsp), so the search score becomes the mean of the
+    per-budget Eq. 6 hardware scores — a proposal wins by being good
+    across the budget sweep, not at one cherry-picked trade-off (closes
+    the ROADMAP frontier-aware-TPE item). ``thr``/``eff`` stay the
+    full-budget point's values for reporting.
+    """
+    thr_pts, thr_norm_pts, dsp_pts = ev._hw_terms(f.res, f.thr)
+    if ev.frontier_mode == "point":
+        k = f.select(ev._eq6_hw_score)
+        return {"thr": float(thr_pts[k]),
+                "thr_norm": float(thr_norm_pts[k]),
+                "dsp": float(dsp_pts[k]),
+                "eff": float(thr_pts[k]) / max(float(f.res[k]), 1e-9)}
+    if ev.frontier_mode != "budgets":
+        raise ValueError(f"unknown frontier_mode {ev.frontier_mode!r}")
+    tn = []
+    dp = []
+    for frac in ev.budget_fracs:
+        k = f.best_under(frac * ev.budget)
+        k = 0 if k is None else k       # infeasible budget: the resource-
+        tn.append(float(thr_norm_pts[k]))   # minimal design still runs
+        dp.append(float(dsp_pts[k]))
+    k = f.best_under(ev.budget)
+    k = 0 if k is None else k
+    return {"thr": float(thr_pts[k]),
+            "thr_norm": float(np.mean(tn)),
+            "dsp": float(np.mean(dp)),
+            "eff": float(thr_pts[k]) / max(float(f.res[k]), 1e-9)}
 
 
 # --------------------------------------------------------------------- #
@@ -191,6 +246,16 @@ class LMEvaluator:
     searches every prunable layer independently, the paper's CNN granularity.
     ``n_search`` is the per-(s_w|s_a) dimension callers pass to
     ``hass_search``.
+
+    ``accel=True`` (default) runs the search-loop acceleration subsystem
+    (DESIGN.md §12): proposals are realized as a vectorized ``s_eff`` swap
+    on one ``LayerVectors`` template (no per-call LayerCost churn) and the
+    DSE goes through a per-evaluator ``DSECache`` — bit-identical metrics
+    to ``accel=False`` (property-tested). ``frontier_mode`` selects Eq. 6
+    frontier scoring (``frontier_hw_metrics``): ``"budgets"`` (default)
+    scalarizes the whole frontier over ``budget_fracs`` deployment budgets;
+    ``"point"`` is the single-point pre-PR-4 semantics. ``dse_engine``
+    pins the greedy engine ("flat" reproduces seed-path wall-clock).
     """
     cfg: object
     hw: HardwareModel
@@ -201,6 +266,10 @@ class LMEvaluator:
     alpha: float = 4.0            # acc-proxy decay per unit energy removed
     act_weight: float = 0.5       # relative acc cost of activation clipping
     lambdas: Lambdas = field(default_factory=Lambdas)
+    accel: bool = True            # DSECache + vectorized stack realization
+    frontier_mode: str = "budgets"    # Eq. 6 frontier scoring (see
+    budget_fracs: tuple = (0.25, 0.5, 0.75, 1.0)   # frontier_hw_metrics)
+    dse_engine: str = "auto"      # greedy engine (flat pins seed behavior)
 
     def __post_init__(self):
         if self.tie not in ("kind", "none"):
@@ -220,6 +289,24 @@ class LMEvaluator:
         self._energy = _gaussian_energy_curve()
         wc = np.array([l.weight_count for l in self.prunable], dtype=np.float64)
         self._wfrac = wc / max(wc.sum(), 1.0)
+        # vectorized realization state (DESIGN.md §12): the workload
+        # constants of the stack never change across proposals, so one
+        # LayerVectors template + a per-proposal s_eff swap replaces
+        # rebuilding the LayerCost list and re-deriving every constant
+        self.dse_cache = DSECache(materialize_designs=False) \
+            if self.accel else None
+        self._lv0 = self.hw.layer_vectors(self.layers)
+        self._prunable_idx = np.array(
+            [i for i, l in enumerate(self.layers) if l.prunable], np.int64)
+        if self.tiled:
+            import math
+
+            from repro.core.perf_model import MXU_TILE
+            # same tile count tile_quantize_sparsity derives — one constant
+            self._n_tiles = np.array(
+                [math.ceil(l.m_dot / MXU_TILE) *
+                 math.ceil(max(1, l.weight_count // l.m_dot) / MXU_TILE)
+                 for l in self.prunable], np.float64)
         dense = incremental_dse(self.layers, self.hw, self.budget,
                                 max_iters=self.dse_iters)
         self.dense_thr = dense.throughput * self.hw.freq
@@ -233,6 +320,24 @@ class LMEvaluator:
         s_a = x[self.n_search:2 * self.n_search][g] \
             if len(x) >= 2 * self.n_search else np.zeros(len(g))
         return s_w, s_a
+
+    def _realize(self, x: np.ndarray):
+        """Proposal -> (realized per-prunable s_w, s_a, full-stack s_eff).
+
+        Vectorized equivalent of reading ``hw.effective_sparsity`` off
+        ``sparse_layers(x)`` (bit-identical floats, property-tested):
+        tile-quantized ``s_w`` on TPU (whole-tile skips only), pair
+        sparsity elsewhere."""
+        s_w, s_a = self._split(x)
+        if self.tiled:
+            s_w = np.floor(np.clip(s_w, 0.0, 1.0) * self._n_tiles) \
+                / self._n_tiles
+            s_eff_p = s_w
+        else:
+            s_eff_p = 1.0 - (1.0 - s_w) * (1.0 - s_a)
+        s_eff = np.zeros(len(self.layers), dtype=np.float64)
+        s_eff[self._prunable_idx] = s_eff_p
+        return s_w, s_a, s_eff
 
     def sparse_layers(self, x: np.ndarray) -> List[LayerCost]:
         """The sparse LayerCost stack one proposal realizes (tile-quantized
@@ -266,10 +371,20 @@ class LMEvaluator:
         return self.lambdas.thr * thr_norm - self.lambdas.dsp * dsp
 
     def __call__(self, x: np.ndarray) -> Dict[str, float]:
-        layers = self.sparse_layers(x)
-        sparse = [l for l in layers if l.prunable]
-        sw = np.array([l.s_w for l in sparse])
-        sa = np.array([l.s_a for l in sparse])
+        if self.accel:
+            sw, sa, s_eff = self._realize(x)
+            lv = replace(self._lv0, s_eff=s_eff)
+            dse = self.dse_cache.dse_vec(lv, self.hw, self.budget,
+                                         max_iters=self.dse_iters,
+                                         engine=self.dse_engine)
+        else:
+            layers = self.sparse_layers(x)
+            sparse = [l for l in layers if l.prunable]
+            sw = np.array([l.s_w for l in sparse])
+            sa = np.array([l.s_a for l in sparse])
+            dse = incremental_dse(layers, self.hw, self.budget,
+                                  max_iters=self.dse_iters,
+                                  engine=self.dse_engine)
         # energy removed: tile pruning drops whole tiles (~uniform energy ->
         # fraction == sw); element pruning drops the smallest-|w| tail
         e_w = sw if self.tiled else \
@@ -280,16 +395,8 @@ class LMEvaluator:
         acc = float(np.exp(-self.alpha *
                            np.dot(self._wfrac, e_w + self.act_weight * e_a)))
         spa = float(np.dot(self._wfrac, (sw + sa) / 2.0))
-        dse = incremental_dse(layers, self.hw, self.budget,
-                              max_iters=self.dse_iters)
-        f = dse.frontier
-        k = f.select(self._eq6_hw_score)
-        thr_pts, thr_norm_pts, dsp_pts = self._hw_terms(f.res, f.thr)
         return {"acc": acc, "spa": spa,
-                "thr": float(thr_pts[k]),
-                "thr_norm": float(thr_norm_pts[k]),
-                "dsp": float(dsp_pts[k]),
-                "eff": float(thr_pts[k]) / max(float(f.res[k]), 1e-9)}
+                **frontier_hw_metrics(self, dse.frontier)}
 
     def evaluate_batch(self, xs: Sequence[np.ndarray]) -> List[Dict[str, float]]:
         """Analytic path: no forward pass to vmap, so a batch is a plain
@@ -308,6 +415,18 @@ class CNNEvaluator:
     Accuracy proxy: top-1 agreement with the dense reference on a calibration
     batch (no ImageNet in-container; the search structure is unchanged —
     documented in DESIGN.md §5).
+
+    ``accel=True`` (default) enables the search-loop acceleration subsystem
+    (DESIGN.md §12): per-layer sorted-|w| tables turn every tau_w quantile
+    into a bit-identical O(1) gather (weights are constant across a search;
+    the seed path re-sorts them inside every jit call), and the DSE runs
+    through a per-evaluator ``DSECache``. ``frontier_mode``/``budget_fracs``
+    select the Eq. 6 frontier scoring (``frontier_hw_metrics``).
+
+    On a ``TPUModel`` the pruner is tile-structured (``pruning.tile_prune``,
+    128-aligned all-zero tiles — the only pattern the MXU skips) and
+    ``LayerCost.s_w_tile`` is MEASURED from the actually pruned weights
+    instead of a synthetic target.
     """
     cfg: object
     params: dict
@@ -319,6 +438,10 @@ class CNNEvaluator:
                                 # use a reduced img_res; layer names match)
     lambdas: Lambdas = field(default_factory=Lambdas)  # Eq. 6 weights used
                                 # to pick the frontier trade-off point
+    accel: bool = True          # presorted tau tables + DSECache
+    frontier_mode: str = "budgets"    # Eq. 6 frontier scoring (see
+    budget_fracs: tuple = (0.25, 0.5, 0.75, 1.0)   # frontier_hw_metrics)
+    dse_engine: str = "auto"    # greedy engine (flat pins seed behavior)
 
     def __post_init__(self):
         from repro.core.perf_model import cnn_layer_costs
@@ -327,24 +450,44 @@ class CNNEvaluator:
         self.layers = [l for l in cnn_layer_costs(self.cost_cfg or self.cfg)]
         self.prunable = [l for l in self.layers if l.prunable]
         self.names = [l.name for l in self.prunable]
+        self.tiled = isinstance(self.hw, TPUModel)
         self.dense_logits = np.asarray(
             cnn.forward(self.cfg, self.params, self.images))
         self.dense_pred = jnp.asarray(self.dense_logits.argmax(-1))
         # activation magnitude samples per prunable layer (for tau_a quantiles)
         self._act_q = jnp.asarray(
             np.stack([self._collect_act_samples()[n] for n in self.names]))
+        self.dse_cache = DSECache() if self.accel else None
         dense = incremental_dse(self.layers, self.hw, self.budget,
                                 max_iters=self.dse_iters)
         self.dense_thr = dense.throughput * self.hw.freq
+        # accel: weights never change across a search, so each layer's
+        # sorted |w| is computed ONCE here and every proposal's tau_w is a
+        # bit-identical O(1) gather instead of jnp.quantile's O(n log n)
+        # re-sort per layer per call (the seed path's dominant cost;
+        # DESIGN.md §12)
+        self._asort = {n: pruning.sorted_abs(self.params[n]["w"])
+                       for n in self.names} \
+            if self.accel and not self.tiled else None
 
         def _eval(params, s_w, s_a):
             pruned = dict(params)
             achieved = []
+            tile_fracs = []
             taus = {}
             for i, n in enumerate(self.names):
                 w = params[n]["w"]
-                tau_w = pruning.threshold_for_sparsity(w, s_w[i])
-                w2 = pruning.prune_tensor(w, tau_w)
+                if self.tiled:
+                    # TPU path: tile-structured pruning; the MXU can only
+                    # skip whole 128-aligned all-zero tiles, so s_w_tile is
+                    # MEASURED on the actually pruned weights
+                    w2, swt = pruning.tile_prune(w, s_w[i])
+                    tile_fracs.append(swt)
+                else:
+                    tau_w = pruning.threshold_for_sparsity_sorted(
+                        self._asort[n], s_w[i]) if self.accel else \
+                        pruning.threshold_for_sparsity(w, s_w[i])
+                    w2 = pruning.prune_tensor(w, tau_w)
                 pruned[n] = dict(params[n], w=w2)
                 achieved.append(jnp.mean(w2 == 0.0))
                 qidx = jnp.clip((s_a[i] * self._act_q.shape[1]).astype(jnp.int32),
@@ -354,7 +497,9 @@ class CNNEvaluator:
                                         sparsity=taus, collect_stats=True)
             acc = jnp.mean(logits.argmax(-1) == self.dense_pred)
             s_a_meas = jnp.stack([stats[n] for n in self.names])
-            return acc, jnp.stack(achieved), s_a_meas
+            swt = jnp.stack(tile_fracs) if self.tiled \
+                else jnp.zeros(len(self.names))
+            return acc, jnp.stack(achieved), s_a_meas, swt
 
         self._eval = jax.jit(_eval)
         # batched frontier: one vmapped prune+forward for a whole batch of
@@ -391,16 +536,21 @@ class CNNEvaluator:
         s_a = jnp.asarray(x[L:2 * L]) if len(x) >= 2 * L else jnp.zeros(L)
         return s_w, s_a
 
-    def _sparse_layers(self, sw_meas: np.ndarray, sa_meas: np.ndarray):
-        """Measured per-layer sparsity -> LayerCost pipeline + avg sparsity."""
+    def _sparse_layers(self, sw_meas: np.ndarray, sa_meas: np.ndarray,
+                       swt_meas: Optional[np.ndarray] = None):
+        """Measured per-layer sparsity -> LayerCost pipeline + avg sparsity.
+        ``swt_meas`` (TPU path) carries the measured all-zero-tile fraction
+        of the actually pruned weights into ``LayerCost.s_w_tile``."""
         layers = []
         spa_num = spa_den = 0.0
         i = 0
         for l in self.layers:
             if l.prunable:
                 sw, sa = float(sw_meas[i]), float(sa_meas[i])
+                swt = float(swt_meas[i]) if swt_meas is not None else 0.0
                 i += 1
-                layers.append(LayerCost(**{**l.__dict__, "s_w": sw, "s_a": sa}))
+                layers.append(LayerCost(**{**l.__dict__, "s_w": sw,
+                                           "s_a": sa, "s_w_tile": swt}))
                 spa_num += (sw + sa) / 2 * l.weight_count
                 spa_den += l.weight_count
             else:
@@ -411,9 +561,10 @@ class CNNEvaluator:
         """The measured sparse LayerCost pipeline for one proposal (one
         jitted prune+forward). Feeds the partitioned multi-chip DSE demo."""
         s_w, s_a = self._split(x)
-        _, sw_meas, sa_meas = map(np.asarray,
-                                  self._eval(self.params, s_w, s_a))
-        return self._sparse_layers(sw_meas, sa_meas)[0]
+        _, sw_meas, sa_meas, swt_meas = map(np.asarray,
+                                            self._eval(self.params, s_w, s_a))
+        return self._sparse_layers(sw_meas, sa_meas,
+                                   swt_meas if self.tiled else None)[0]
 
     def _hw_terms(self, res: np.ndarray, thr: np.ndarray):
         """(thr in samples/s, thr_norm, dsp) for frontier points, vectorized.
@@ -428,34 +579,30 @@ class CNNEvaluator:
         _, thr_norm, dsp = self._hw_terms(res, thr)
         return self.lambdas.thr * thr_norm - self.lambdas.dsp * dsp
 
-    def _metrics(self, acc: float, sw_meas: np.ndarray,
-                 sa_meas: np.ndarray) -> Dict[str, float]:
-        """Measured per-layer sparsity -> perf model (Eq. 1-3) -> one DSE ->
-        pick the Eq. 6-optimal point on its frontier -> the metric dict.
-
-        A single DSE run yields the whole (resource, throughput) frontier;
-        the hardware terms of Eq. 6 are scored at the frontier point
-        maximizing lambda_thr*thr_norm - lambda_dsp*dsp under the budget,
-        instead of always paying the full-budget endpoint's dsp."""
-        layers, spa = self._sparse_layers(sw_meas, sa_meas)
-        dse = incremental_dse(layers, self.hw, self.budget,
-                              max_iters=self.dse_iters)
-        f = dse.frontier
-        k = f.select(self._eq6_hw_score)
-        thr_pts, thr_norm_pts, dsp_pts = self._hw_terms(f.res, f.thr)
-        return {"acc": acc,
-                "spa": spa,
-                "thr": float(thr_pts[k]),
-                "thr_norm": float(thr_norm_pts[k]),
-                "dsp": float(dsp_pts[k]),
-                "eff": float(thr_pts[k]) / max(float(f.res[k]), 1e-9)}
+    def _metrics(self, acc: float, sw_meas: np.ndarray, sa_meas: np.ndarray,
+                 swt_meas: Optional[np.ndarray] = None) -> Dict[str, float]:
+        """Measured per-layer sparsity -> perf model (Eq. 1-3) -> one DSE
+        (through the ``DSECache`` when accelerated) -> Eq. 6 hardware terms
+        off the frontier (``frontier_hw_metrics``) -> the metric dict."""
+        layers, spa = self._sparse_layers(sw_meas, sa_meas, swt_meas)
+        if self.dse_cache is not None:
+            dse = self.dse_cache.dse(layers, self.hw, self.budget,
+                                     max_iters=self.dse_iters,
+                                     engine=self.dse_engine)
+        else:
+            dse = incremental_dse(layers, self.hw, self.budget,
+                                  max_iters=self.dse_iters,
+                                  engine=self.dse_engine)
+        return {"acc": acc, "spa": spa,
+                **frontier_hw_metrics(self, dse.frontier)}
 
     def __call__(self, x: np.ndarray) -> Dict[str, float]:
         # 1-2) one-shot prune + accuracy proxy + measured act sparsity (jitted)
         s_w, s_a = self._split(x)
-        acc, sw_meas, sa_meas = map(np.asarray,
-                                    self._eval(self.params, s_w, s_a))
-        return self._metrics(float(acc), sw_meas, sa_meas)
+        acc, sw_meas, sa_meas, swt_meas = map(np.asarray,
+                                              self._eval(self.params, s_w, s_a))
+        return self._metrics(float(acc), sw_meas, sa_meas,
+                             swt_meas if self.tiled else None)
 
     def evaluate_batch(self, xs: Sequence[np.ndarray]) -> List[Dict[str, float]]:
         """Score a batch of proposals with ONE vmapped prune+forward call;
@@ -487,7 +634,8 @@ class CNNEvaluator:
                 [s_a, jnp.broadcast_to(s_a[-1], (pad,) + s_a.shape[1:])])
             self.padded_batches += 1
         self.batch_shapes.add(int(s_w.shape[0]))
-        accs, sw_meas, sa_meas = map(
+        accs, sw_meas, sa_meas, swt_meas = map(
             np.asarray, self._eval_batch(self.params, s_w, s_a))
-        return [self._metrics(float(accs[b]), sw_meas[b], sa_meas[b])
+        return [self._metrics(float(accs[b]), sw_meas[b], sa_meas[b],
+                              swt_meas[b] if self.tiled else None)
                 for b in range(B)]

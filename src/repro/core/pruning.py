@@ -35,6 +35,45 @@ def prune_tensor(w: jnp.ndarray, tau) -> jnp.ndarray:
     return jnp.where(jnp.abs(w) >= tau, w, jnp.zeros_like(w))
 
 
+def sorted_abs(w: jnp.ndarray) -> jnp.ndarray:
+    """Sorted |w| vector — the precomputable half of a quantile threshold.
+    Weights are constant across a whole sparsity search, so sorting once
+    and gathering per proposal replaces the O(n log n) sort that
+    ``jnp.quantile`` re-runs inside every evaluation (DESIGN.md §12)."""
+    return jnp.sort(jnp.abs(w).reshape(-1))
+
+
+def sorted_quantile(asort: jnp.ndarray, q) -> jnp.ndarray:
+    """``jnp.quantile(a, q)`` (method='linear') on a pre-sorted 1-D array.
+
+    Replicates jax's ``_quantile`` lax-op structure operation for operation
+    (scale, floor/ceil, clamp, two gathers, lerp as low*lw + high*hw) so the
+    result is bit-identical to calling ``jnp.quantile`` on the unsorted
+    data — property-tested in ``tests/test_pruning_tpe.py``. Jit-safe
+    (``q`` may trace)."""
+    from jax import lax
+    q = jnp.asarray(q, asort.dtype)
+    n = lax.convert_element_type(asort.shape[0], q.dtype)
+    q = lax.mul(q, n - 1)
+    low = lax.floor(q)
+    high = lax.ceil(q)
+    high_weight = lax.sub(q, low)
+    low_weight = lax.sub(jnp.asarray(1, high_weight.dtype), high_weight)
+    low = lax.clamp(jnp.asarray(0, low.dtype), low, n - 1)
+    high = lax.clamp(jnp.asarray(0, high.dtype), high, n - 1)
+    low_value = asort[lax.convert_element_type(low, jnp.int32)]
+    high_value = asort[lax.convert_element_type(high, jnp.int32)]
+    return lax.add(lax.mul(low_value.astype(q.dtype), low_weight),
+                   lax.mul(high_value.astype(q.dtype), high_weight))
+
+
+def threshold_for_sparsity_sorted(asort: jnp.ndarray, sparsity) -> jnp.ndarray:
+    """``threshold_for_sparsity`` reading a ``sorted_abs`` table instead of
+    sorting — bit-identical tau (same clip/zero-floor semantics)."""
+    q = sorted_quantile(asort, jnp.clip(sparsity, 0.0, 1.0))
+    return jnp.where(jnp.asarray(sparsity) <= 0.0, 0.0, q)
+
+
 def prune_by_sparsity(w: jnp.ndarray, sparsity: float) -> jnp.ndarray:
     return prune_tensor(w, threshold_for_sparsity(w, sparsity))
 
@@ -54,6 +93,37 @@ def tile_sparsity(w: jnp.ndarray, bk: int = 128, bn: int = 128) -> float:
     t = wp.reshape((K + pk) // bk, bk, (N + pn) // bn, bn)
     nonzero = jnp.any(t != 0, axis=(1, 3))
     return float(1.0 - jnp.mean(nonzero))
+
+
+def tile_prune(w: jnp.ndarray, sparsity, bk: int = 128, bn: int = 128):
+    """Tile-structured one-shot pruning: zero out whole 128-aligned
+    (bk, bn) tiles, lowest mean-|w| first, targeting a ``sparsity``
+    fraction of all-zero tiles — the only sparsity pattern the MXU backend
+    can actually skip (``LayerCost.s_w_tile``, DESIGN.md §6/§12).
+
+    Non-2D weights flatten leading dims (a conv's (k, k, cin, cout) prunes
+    as the (k*k*cin, cout) matmul the lowering runs); ragged edges are
+    zero-padded for tile scoring, so boundary tiles rank slightly lower.
+    Jit-safe (``sparsity`` may trace). Returns ``(pruned w, realized
+    fraction of all-zero tiles)`` — realized is *measured* on the pruned
+    tensor (quantile ties can under-shoot the target; pre-existing zero
+    tiles count)."""
+    orig_shape = w.shape
+    w2 = w if w.ndim == 2 else w.reshape(-1, w.shape[-1])
+    K, N = w2.shape
+    pk, pn = (-K) % bk, (-N) % bn
+    wp = jnp.pad(w2, ((0, pk), (0, pn)))
+    Kt, Nt = (K + pk) // bk, (N + pn) // bn
+    tiles = wp.reshape(Kt, bk, Nt, bn)
+    norms = jnp.mean(jnp.abs(tiles), axis=(1, 3))
+    tau = jnp.quantile(norms.reshape(-1), jnp.clip(sparsity, 0.0, 1.0))
+    keep = norms >= tau
+    keep = jnp.where(jnp.asarray(sparsity) <= 0.0,
+                     jnp.ones_like(keep), keep)
+    pruned_tiles = tiles * keep[:, None, :, None]
+    zero_frac = 1.0 - jnp.mean(jnp.any(pruned_tiles != 0, axis=(1, 3)))
+    out = pruned_tiles.reshape(K + pk, N + pn)[:K, :N].reshape(orig_shape)
+    return out, zero_frac
 
 
 def prune_params(params: Dict[str, Any],

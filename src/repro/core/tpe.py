@@ -60,17 +60,62 @@ class TPE:
             return self._rng.uniform(self.lo, self.hi)
         return self._propose(self._fit())
 
-    def ask_batch(self, k: int) -> List[np.ndarray]:
-        """k proposals without intermediate tells. Candidates are independent
-        draws from the current l(x)/g(x) model (random-restart parallel TPE)
+    def ask_batch(self, k: int,
+                  liar: Optional[str] = None) -> List[np.ndarray]:
+        """k proposals without intermediate tells.
+
+        ``liar=None`` (the legacy mode): candidates are independent draws
+        from the current l(x)/g(x) model (random-restart parallel TPE)
         sharing ONE model fit (the fit consumes no RNG and xs/ys don't change
         inside a batch): each draw advances the RNG, so the batch is diverse,
         and ask_batch(1) is bit-identical to a single ask() — the serial
-        search is the batch_size=1 special case (DESIGN.md §8)."""
-        if len(self.xs) < self.n_startup:
-            return [self._rng.uniform(self.lo, self.hi) for _ in range(k)]
-        fit = self._fit()
-        return [self._propose(fit) for _ in range(k)]
+        search is the batch_size=1 special case (DESIGN.md §8).
+
+        ``liar in ("min", "mean", "max")`` enables the constant-liar
+        protocol (Ginsbourger et al.; DESIGN.md §12): after each batch
+        member is proposed, it is *provisionally told* to a scratch copy of
+        the observations with a constant lie — the worst (min), mean, or
+        best (max) score seen so far — and the Parzen model is refit before
+        the next member. The pessimistic ``"min"`` lie marks the region
+        just proposed as bad, pushing later members away from it: the batch
+        spreads over distinct basins instead of resampling one mode.
+        Nothing persists: ``tell_batch`` later records the REAL scores, and
+        the lies never touch ``self.xs``/``self.ys``. Model refits consume
+        no RNG and each member still draws ``n_ei`` candidates, so the RNG
+        stream position after ``ask_batch(k, liar=...)`` is identical to
+        the legacy mode — downstream draws replay bit-for-bit at a fixed
+        seed, whichever protocol ran. ``ask_batch(1, liar=...)`` is a
+        single ``ask()`` (there is no one to lie to).
+        """
+        if liar not in (None, "min", "mean", "max"):
+            raise ValueError(f"unknown liar mode {liar!r}")
+        if liar is None or k <= 1 or not self.ys:
+            if len(self.xs) < self.n_startup:
+                return [self._rng.uniform(self.lo, self.hi) for _ in range(k)]
+            fit = self._fit()
+            return [self._propose(fit) for _ in range(k)]
+        lie = {"min": min(self.ys), "mean": float(np.mean(self.ys)),
+               "max": max(self.ys)}[liar]
+        real_xs, real_ys = self.xs, self.ys
+        n_real = len(real_xs)
+        out: List[np.ndarray] = []
+        try:
+            self.xs, self.ys = list(real_xs), list(real_ys)
+            for i in range(k):
+                # startup is judged on REAL observations at batch entry so
+                # a pre-startup batch stays all-uniform exactly like the
+                # legacy mode (same RNG consumption per member)
+                if n_real < self.n_startup:
+                    x = self._rng.uniform(self.lo, self.hi)
+                else:
+                    x = self._propose(self._fit())
+                out.append(x)
+                if i + 1 < k:
+                    self.xs.append(np.asarray(x, float))
+                    self.ys.append(lie)
+        finally:
+            self.xs, self.ys = real_xs, real_ys
+        return out
 
     def tell(self, x: np.ndarray, y: float) -> None:
         self.xs.append(np.asarray(x, float))
@@ -96,17 +141,18 @@ class TPE:
         observation in that dim (hyperopt's adaptive Parzen): wide while the
         good set is spread out (exploration), tight once it clusters
         (refinement). A pure Scott bandwidth collapses onto the incumbent and
-        the search stalls at random-search quality."""
+        the search stalls at random-search quality. All dims are sorted in
+        one argsort call — this sits on the per-ask hot path."""
         span = self.hi - self.lo
         m = len(pts)
+        order = np.argsort(pts, axis=0, kind="stable")        # (m, D)
+        v = np.empty((m + 2, self.dim))
+        v[0] = self.lo
+        v[-1] = self.hi
+        v[1:-1] = np.take_along_axis(pts, order, axis=0)
+        bw_sorted = np.maximum(v[1:-1] - v[:-2], v[2:] - v[1:-1])
         bws = np.empty((m, self.dim))
-        for d in range(self.dim):
-            order = np.argsort(pts[:, d])
-            v = np.concatenate([[self.lo[d]], pts[order, d], [self.hi[d]]])
-            gap_lo = v[1:-1] - v[:-2]
-            gap_hi = v[2:] - v[1:-1]
-            bw_sorted = np.maximum(gap_lo, gap_hi)
-            bws[order, d] = bw_sorted
+        np.put_along_axis(bws, order, bw_sorted, axis=0)
         return np.clip(bws, 0.02 * span, 0.7 * span)
 
     def _sample_parzen(self, pts: np.ndarray, bw: np.ndarray,

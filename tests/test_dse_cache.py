@@ -1,0 +1,261 @@
+"""DSECache + class-grouped engine correctness (DESIGN.md §12).
+
+The acceleration subsystem's whole contract is BIT-exactness: the grouped
+engine must replay the flat engine decision for decision, and every cache
+answer (exact memo or warm-start certificate) must equal a cold
+``incremental_dse`` on the queried stack. These tests drive both with
+randomized kind-tied stacks — the structure the LM evaluator produces —
+plus engineered floor-stable/bottleneck deltas for the warm certificate.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.dse import (DSECache, SegmentTable, _layer_classes,
+                            _run_incremental, _run_incremental_grouped,
+                            incremental_dse, partition_pipeline)
+from repro.core.perf_model import (FPGAModel, LayerCost, TPUModel,
+                                   pair_sparsity)
+
+HW = FPGAModel()
+
+
+def kind_tied_stack(seed: int, n_blocks: int = 12, *, tiny_kind: bool = True):
+    """LM-shaped synthetic stack: every block repeats the same few matmul
+    kinds, sparsity tied per kind — plus a non-prunable attn layer. The
+    optional ``tiny`` kind has so few MACs that its (1,1) floor rate sits
+    far above any realistic bottleneck (the warm-certificate target)."""
+    rng = np.random.default_rng(seed)
+    kinds = [("wq", 64, 64), ("wkv", 64, 32), ("ffn", 64, 256)]
+    if tiny_kind:
+        kinds.append(("tiny", 8, 4))
+    s_of = {k: float(rng.uniform(0.0, 0.8)) for k, _, _ in kinds}
+    layers = []
+    for b in range(n_blocks):
+        for k, m, c in kinds:
+            layers.append(LayerCost(
+                name=f"l{b}.{k}", macs=m * c, m_dot=m, weight_count=m * c,
+                act_in=m, act_out=c, s_w=s_of[k]))
+        layers.append(LayerCost(name=f"l{b}.attn", macs=2 * 64 * 16,
+                                m_dot=16, weight_count=0, act_in=64,
+                                act_out=64, kind="attn", prunable=False))
+    return layers
+
+
+def set_kind(layers, kind, s_w):
+    out = []
+    for l in layers:
+        if l.prunable and l.name.endswith("." + kind):
+            out.append(LayerCost(**{**l.__dict__, "s_w": s_w}))
+        else:
+            out.append(l)
+    return out
+
+
+def assert_same_result(a, b):
+    assert [(d.spe, d.macs_per_spe) for d in a.designs] == \
+        [(d.spe, d.macs_per_spe) for d in b.designs]
+    assert a.throughput == b.throughput
+    assert a.resource == b.resource
+    assert a.trace == b.trace
+    assert a.theta_r == b.theta_r
+    fa, fb = a.frontier, b.frontier
+    assert np.array_equal(fa.res, fb.res) and np.array_equal(fa.thr, fb.thr)
+    assert np.array_equal(fa.spe, fb.spe) and np.array_equal(fa.n, fb.n)
+
+
+# --------------------------------------------------------------------- #
+# Grouped engine == flat engine, bit for bit
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(8))
+def test_grouped_engine_matches_flat(seed):
+    layers = kind_tied_stack(seed)
+    lv = HW.layer_vectors(layers)
+    for budget, iters in ((4096.0, 300), (512.0, 300), (4096.0, 7),
+                          (float(lv.res_unit.sum()) * 1.2, 100)):
+        a = _run_incremental(lv, HW, budget, iters)
+        b = _run_incremental_grouped(lv, HW, budget, iters)
+        assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+        assert a[2] == b[2] and a[3] == b[3] and a[4] == b[4] and a[6] == b[6]
+        fa, fb = a[5], b[5]
+        assert np.array_equal(fa.res, fb.res)
+        assert np.array_equal(fa.thr, fb.thr)
+        assert np.array_equal(fa.spe, fb.spe)
+        assert np.array_equal(fa.n, fb.n)
+
+
+def test_grouped_engine_matches_flat_on_untied_stack():
+    """Per-layer random sparsity: nearly every layer is its own class, the
+    worst case for grouping — results must still match exactly."""
+    rng = np.random.default_rng(3)
+    layers = kind_tied_stack(3)
+    layers = [LayerCost(**{**l.__dict__,
+                           "s_w": float(rng.uniform(0, 0.9))})
+              if l.prunable else l for l in layers]
+    lv = HW.layer_vectors(layers)
+    a = _run_incremental(lv, HW, 2048.0, 300)
+    b = _run_incremental_grouped(lv, HW, 2048.0, 300)
+    assert np.array_equal(a[0], b[0]) and a[2] == b[2] and a[4] == b[4]
+
+
+def test_auto_engine_dispatch():
+    layers = kind_tied_stack(0)
+    lv = HW.layer_vectors(layers)
+    C, pos = _layer_classes(lv)
+    assert C <= 5                      # kinds + attn, tied across blocks
+    assert sorted(p for ps in pos for p in ps) == list(range(len(lv)))
+    r_auto = incremental_dse(layers, HW, 2048.0, max_iters=200)
+    r_flat = incremental_dse(layers, HW, 2048.0, max_iters=200,
+                             engine="flat")
+    assert_same_result(r_auto, r_flat)
+    with pytest.raises(ValueError):
+        incremental_dse(layers, HW, 2048.0, engine="nope")
+
+
+# --------------------------------------------------------------------- #
+# DSECache: exact memo
+# --------------------------------------------------------------------- #
+def test_exact_memo_returns_shared_result():
+    layers = kind_tied_stack(1)
+    cache = DSECache()
+    r1 = cache.dse(layers, HW, 2048.0, max_iters=200)
+    r2 = cache.dse(layers, HW, 2048.0, max_iters=200)
+    assert r1 is r2
+    assert cache.stats() == {"hits": 1, "warm_hits": 0, "cold_runs": 1}
+    # a different budget is a different key
+    cache.dse(layers, HW, 1024.0, max_iters=200)
+    assert cache.stats()["cold_runs"] == 2
+
+
+def test_cache_result_equals_direct_dse():
+    layers = kind_tied_stack(2)
+    cache = DSECache()
+    assert_same_result(cache.dse(layers, HW, 2048.0, max_iters=200),
+                       incremental_dse(layers, HW, 2048.0, max_iters=200))
+
+
+# --------------------------------------------------------------------- #
+# DSECache: warm-start certificate (floor-stability theorem)
+# --------------------------------------------------------------------- #
+def test_warm_start_on_floor_stable_delta_is_bit_exact():
+    """Perturbing only the tiny kind (floor rate far above theta_r) must
+    warm-hit AND equal the cold run on the perturbed stack bit for bit."""
+    layers = kind_tied_stack(4)
+    cache = DSECache()
+    cache.dse(layers, HW, 2048.0, max_iters=200)
+    hit = 0
+    for s_new in (0.05, 0.33, 0.71):
+        pert = set_kind(layers, "tiny", s_new)
+        r = cache.dse(pert, HW, 2048.0, max_iters=200)
+        cold = incremental_dse(pert, HW, 2048.0, max_iters=200)
+        assert r.throughput == cold.throughput
+        assert r.resource == cold.resource
+        assert r.trace == cold.trace
+        assert np.array_equal(r.frontier.spe, cold.frontier.spe)
+        hit = cache.stats()["warm_hits"]
+    assert hit >= 1, "tiny-kind deltas never certified warm"
+    # tiny layers really are at the floor in the cold result
+    for l, d in zip(layers, incremental_dse(layers, HW, 2048.0,
+                                            max_iters=200).designs):
+        if l.name.endswith(".tiny"):
+            assert (d.spe, d.macs_per_spe) == (1, 1)
+
+
+def test_bottleneck_delta_falls_back_cold_and_stays_correct():
+    """Perturbing the dominant kind cannot be certified — the cache must
+    fall back to a cold run and still return the exact result."""
+    layers = kind_tied_stack(5)
+    cache = DSECache()
+    cache.dse(layers, HW, 2048.0, max_iters=200)
+    pert = set_kind(layers, "ffn", 0.02)
+    r = cache.dse(pert, HW, 2048.0, max_iters=200)
+    assert cache.stats()["warm_hits"] == 0
+    assert cache.stats()["cold_runs"] == 2
+    assert_same_result(r, incremental_dse(pert, HW, 2048.0, max_iters=200))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_random_proposal_deltas_always_match_cold(seed):
+    """Property: WHATEVER the cache answers (exact, warm, or cold), it
+    equals a cold ``incremental_dse`` of the queried stack."""
+    rng = np.random.default_rng(seed)
+    layers = kind_tied_stack(seed)
+    cache = DSECache()
+    kinds = ["wq", "wkv", "ffn", "tiny"]
+    for _ in range(6):
+        pert = layers
+        for k in kinds:
+            if rng.random() < 0.5:
+                pert = set_kind(pert, k, float(rng.uniform(0, 0.85)))
+        r = cache.dse(pert, HW, 1024.0, max_iters=150)
+        cold = incremental_dse(pert, HW, 1024.0, max_iters=150)
+        assert r.throughput == cold.throughput
+        assert r.resource == cold.resource
+        assert r.trace == cold.trace
+        layers = pert
+
+
+def test_warm_certificate_respects_activation_sparsity():
+    """s_a moves s_pair continuously — certificate keys on the realized
+    s_eff, so activation-only deltas behave exactly like weight deltas."""
+    layers = kind_tied_stack(6)
+    pert = [LayerCost(**{**l.__dict__, "s_a": 0.3})
+            if l.prunable and l.name.endswith(".tiny") else l
+            for l in layers]
+    assert pert[3].s_pair == pair_sparsity(pert[3].s_w, pert[3].s_a)
+    cache = DSECache()
+    cache.dse(layers, HW, 2048.0, max_iters=150)
+    r = cache.dse(pert, HW, 2048.0, max_iters=150)
+    assert_same_result(r, incremental_dse(pert, HW, 2048.0, max_iters=150))
+
+
+def test_materialize_designs_off_keeps_frontier_usable():
+    layers = kind_tied_stack(7)
+    cache = DSECache(materialize_designs=False)
+    r = cache.dse(layers, HW, 2048.0, max_iters=200)
+    full = incremental_dse(layers, HW, 2048.0, max_iters=200)
+    assert r.designs == []
+    k = r.frontier.best_under(2048.0)
+    assert [(d.spe, d.macs_per_spe) for d in r.frontier.materialize(k)] == \
+        [(d.spe, d.macs_per_spe) for d in full.designs]
+
+
+# --------------------------------------------------------------------- #
+# Shared cache through SegmentTable / partition_pipeline
+# --------------------------------------------------------------------- #
+def test_partition_pipeline_with_shared_cache_is_identical():
+    layers = kind_tied_stack(8, n_blocks=6)
+    tpu = TPUModel(chips=4)
+    kw = dict(n_parts=4, batch=32, dse_iters=150)
+    cache = DSECache()
+    plain = [partition_pipeline(layers, tpu, tpu.chip_budget,
+                                objective=o, **kw)
+             for o in ("sum", "maxmin")]
+    shared = [partition_pipeline(layers, tpu, tpu.chip_budget,
+                                 objective=o, cache=cache, **kw)
+              for o in ("sum", "maxmin")]
+    for p, q in zip(plain, shared):
+        assert p.cuts == q.cuts
+        assert p.time_per_batch == q.time_per_batch
+        assert p.throughput == q.throughput
+        assert p.steady_throughput == q.steady_throughput
+    # repeated-block stacks dedupe even within one call (two segments with
+    # identical layer sequences share a key), so cold <= first call's fills;
+    # the second call adds NO cold runs at all
+    stats = cache.stats()
+    assert stats["cold_runs"] <= shared[0].dse_calls
+    assert stats["hits"] + stats["warm_hits"] + stats["cold_runs"] == \
+        shared[0].dse_calls + shared[1].dse_calls
+
+
+def test_segment_table_cache_counts_fills_not_cold_runs():
+    layers = kind_tied_stack(9, n_blocks=5)
+    cache = DSECache()
+    t1 = SegmentTable(layers, HW, 1024.0, 32, 150, cache=cache)
+    t1.frontier(0, 5)
+    t1.frontier(0, 5)
+    t2 = SegmentTable(layers, HW, 1024.0, 32, 150, cache=cache)
+    t2.frontier(0, 5)
+    assert t1.dse_calls == 1 and t2.dse_calls == 1
+    assert cache.stats() == {"hits": 1, "warm_hits": 0, "cold_runs": 1}

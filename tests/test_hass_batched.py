@@ -77,6 +77,89 @@ def test_tell_batch_length_mismatch_raises():
 
 
 # --------------------------------------------------------------------- #
+# Constant-liar protocol (DESIGN.md §12)
+# --------------------------------------------------------------------- #
+def _seeded_model(seed=3, dim=4, n=14):
+    t = _tpe(seed=seed, dim=dim)
+    for _ in range(n):
+        x = t.ask()
+        t.tell(x, float(-np.sum((x - 0.4) ** 2)))
+    return t
+
+
+def test_constant_liar_batch_replays_at_fixed_seed():
+    a = _seeded_model(seed=7)
+    b = _seeded_model(seed=7)
+    xa = a.ask_batch(6, liar="min")
+    xb = b.ask_batch(6, liar="min")
+    for p, q in zip(xa, xb):
+        assert np.array_equal(p, q)
+
+
+def test_constant_liar_leaves_observations_untouched():
+    t = _seeded_model()
+    xs_before = [x.copy() for x in t.xs]
+    ys_before = list(t.ys)
+    t.ask_batch(5, liar="min")
+    assert len(t.xs) == len(xs_before) and t.ys == ys_before
+    for p, q in zip(t.xs, xs_before):
+        assert np.array_equal(p, q)
+
+
+def test_constant_liar_preserves_rng_stream_position():
+    """Model refits consume no RNG, so the draw AFTER a batch is identical
+    whichever protocol proposed the batch — fixed-seed searches stay
+    replayable across the liar knob."""
+    a = _seeded_model(seed=11)
+    b = _seeded_model(seed=11)
+    a.ask_batch(5, liar="min")
+    b.ask_batch(5, liar=None)
+    assert np.array_equal(a.ask(), b.ask())
+
+
+def test_constant_liar_changes_proposals_vs_independent():
+    a = _seeded_model(seed=2)
+    b = _seeded_model(seed=2)
+    xs_l = a.ask_batch(6, liar="min")
+    xs_i = b.ask_batch(6, liar=None)
+    assert np.array_equal(xs_l[0], xs_i[0])      # first member: same model
+    assert any(not np.array_equal(p, q) for p, q in zip(xs_l[1:], xs_i[1:]))
+
+
+def test_constant_liar_single_member_is_plain_ask():
+    a = _seeded_model(seed=5)
+    b = _seeded_model(seed=5)
+    (xa,) = a.ask_batch(1, liar="min")
+    assert np.array_equal(xa, b.ask())
+
+
+def test_constant_liar_startup_batch_matches_legacy():
+    a = _tpe(seed=9)
+    b = _tpe(seed=9)
+    a.tell(np.full(3, 0.5), 1.0)     # 1 obs, still pre-startup
+    b.tell(np.full(3, 0.5), 1.0)
+    xs_l = a.ask_batch(4, liar="min")
+    xs_i = b.ask_batch(4, liar=None)
+    for p, q in zip(xs_l, xs_i):
+        assert np.array_equal(p, q)
+
+
+def test_unknown_liar_mode_raises():
+    with pytest.raises(ValueError):
+        _tpe().ask_batch(3, liar="median")
+
+
+def test_hass_search_passes_liar_through():
+    kw = dict(iters=18, seed=6, batch_size=5)
+    r_l = hass_search(synth_eval, 4, liar="min", **kw)
+    r_i = hass_search(synth_eval, 4, liar=None, **kw)
+    assert len(r_l.trials) == len(r_i.trials) == 18
+    # post-startup rounds diverge between protocols
+    assert any(not np.array_equal(a.x, b.x)
+               for a, b in zip(r_l.trials[10:], r_i.trials[10:]))
+
+
+# --------------------------------------------------------------------- #
 # Batched hass_search
 # --------------------------------------------------------------------- #
 def test_batch_size_one_reproduces_serial_search_trial_for_trial():

@@ -5,8 +5,9 @@ import pytest
 
 from repro.configs import reduce_config
 from repro.configs.paper_cnns import RESNET18
-from repro.core.dse import incremental_dse
-from repro.core.hass import CNNEvaluator, Lambdas, hass_search
+from repro.core.dse import ParetoFrontier, incremental_dse
+from repro.core.hass import (CNNEvaluator, Lambdas, frontier_hw_metrics,
+                             hass_search)
 from repro.core.perf_model import FPGAModel
 from repro.models import cnn
 
@@ -63,11 +64,17 @@ def test_batched_search_on_cnn_evaluator(evaluator):
 
 
 def test_metrics_pick_eq6_optimal_frontier_point(evaluator):
-    """The hardware terms are scored at the frontier point maximizing the
-    Eq. 6 combination — one DSE run, no re-search over budgets."""
+    """``frontier_mode="point"``: the hardware terms are scored at the
+    frontier point maximizing the Eq. 6 combination — one DSE run, no
+    re-search over budgets."""
     L = len(evaluator.prunable)
     x = np.full(2 * L, 0.5)
-    m = evaluator(x)
+    old_mode = evaluator.frontier_mode
+    evaluator.frontier_mode = "point"
+    try:
+        m = evaluator(x)
+    finally:
+        evaluator.frontier_mode = old_mode
     layers = evaluator.sparse_layers(x)
     f = incremental_dse(layers, evaluator.hw, evaluator.budget,
                         max_iters=evaluator.dse_iters).frontier
@@ -81,6 +88,31 @@ def test_metrics_pick_eq6_optimal_frontier_point(evaluator):
     assert m["dsp"] == pytest.approx(float(dsp[k]))
     # never worse than always paying the full-budget endpoint (last point)
     assert scores[k] >= scores[-1] - 1e-15
+
+
+def test_metrics_budgets_mode_scalarizes_the_frontier(evaluator):
+    """``frontier_mode="budgets"`` (default): thr_norm/dsp are the MEANS of
+    the per-deployment-budget values read off the frontier at each
+    ``budget_fracs`` point (DESIGN.md §12)."""
+    L = len(evaluator.prunable)
+    x = np.full(2 * L, 0.5)
+    assert evaluator.frontier_mode == "budgets"
+    m = evaluator(x)
+    layers = evaluator.sparse_layers(x)
+    f = incremental_dse(layers, evaluator.hw, evaluator.budget,
+                        max_iters=evaluator.dse_iters).frontier
+    thr_pts = f.thr * evaluator.hw.freq
+    thr_norm = np.log2(1.0 + thr_pts / evaluator.dense_thr) / 4.0
+    tn, dp = [], []
+    for frac in evaluator.budget_fracs:
+        k = f.best_under(frac * evaluator.budget)
+        k = 0 if k is None else k
+        tn.append(float(thr_norm[k]))
+        dp.append(float(f.res[k]) / evaluator.budget)
+    assert m["thr_norm"] == pytest.approx(float(np.mean(tn)))
+    assert m["dsp"] == pytest.approx(float(np.mean(dp)))
+    k_full = f.best_under(evaluator.budget)
+    assert m["thr"] == pytest.approx(float(thr_pts[k_full]))
 
 
 def test_ragged_tail_batch_is_padded_to_one_compiled_shape(evaluator):
@@ -101,6 +133,90 @@ def test_ragged_tail_batch_is_padded_to_one_compiled_shape(evaluator):
         assert t.metrics[k] == pytest.approx(ms[k], rel=1e-3, abs=1e-6), k
 
 
+class _FakeEv:
+    """Minimal evaluator facade for frontier_hw_metrics property tests."""
+
+    def __init__(self, budget=100.0, mode="budgets",
+                 fracs=(0.25, 0.5, 0.75, 1.0)):
+        self.budget = budget
+        self.frontier_mode = mode
+        self.budget_fracs = fracs
+        self.lambdas = Lambdas()
+        self.dense_thr = 1.0
+        self.hw = FPGAModel()
+
+    def _hw_terms(self, res, thr):
+        thr_s = thr * self.hw.freq
+        thr_norm = np.log2(1.0 + thr_s / self.dense_thr) / 4.0
+        return thr_s, thr_norm, res / self.budget
+
+    def _eq6_hw_score(self, res, thr):
+        _, thr_norm, dsp = self._hw_terms(res, thr)
+        return self.lambdas.thr * thr_norm - self.lambdas.dsp * dsp
+
+
+def _frontier(res, thr):
+    res = np.asarray(res, float)
+    thr = np.asarray(thr, float)
+    L = 2
+    k = len(res)
+    return ParetoFrontier(res=res, thr=thr,
+                          spe=np.ones((k, L), np.int64),
+                          n=np.ones((k, L), np.int64))
+
+
+def test_frontier_scalarization_monotone_in_throughput():
+    """Raising throughput anywhere on the frontier (same resource profile)
+    never lowers the budgets-mode Eq. 6 hardware score."""
+    ev = _FakeEv()
+    res = [10.0, 25.0, 60.0, 100.0]
+    thr = np.array([1e-9, 2e-9, 3e-9, 4e-9])
+    base = frontier_hw_metrics(ev, _frontier(res, thr))
+    lam = ev.lambdas
+
+    def hw_score(m):
+        return lam.thr * m["thr_norm"] - lam.dsp * m["dsp"]
+
+    for j in range(len(res)):
+        up = thr.copy()
+        up[j:] = up[j:] * 1.5          # keep the frontier sorted/increasing
+        m = frontier_hw_metrics(ev, _frontier(res, up))
+        assert m["thr_norm"] >= base["thr_norm"] - 1e-15
+        assert m["dsp"] == base["dsp"]
+        assert hw_score(m) >= hw_score(base) - 1e-15
+
+
+def test_frontier_scalarization_is_mean_of_per_budget_scores():
+    """Eq. 6 is linear in (thr_norm, dsp), so the budgets-mode hardware
+    score equals the MEAN of the per-deployment-budget Eq. 6 scores."""
+    ev = _FakeEv()
+    f = _frontier([10.0, 25.0, 60.0, 100.0], [1e-9, 2e-9, 3e-9, 4e-9])
+    m = frontier_hw_metrics(ev, f)
+    lam = ev.lambdas
+    per_budget = []
+    for frac in ev.budget_fracs:
+        k = f.best_under(frac * ev.budget)
+        _, tn, dsp = ev._hw_terms(f.res[k], f.thr[k])
+        per_budget.append(lam.thr * float(tn) - lam.dsp * float(dsp))
+    combined = lam.thr * m["thr_norm"] - lam.dsp * m["dsp"]
+    assert combined == pytest.approx(float(np.mean(per_budget)))
+
+
+def test_frontier_point_mode_matches_select():
+    ev = _FakeEv(mode="point")
+    f = _frontier([10.0, 25.0, 60.0, 100.0], [1e-9, 2e-9, 3e-9, 4e-9])
+    m = frontier_hw_metrics(ev, f)
+    k = f.select(ev._eq6_hw_score)
+    thr_s, tn, dsp = ev._hw_terms(f.res, f.thr)
+    assert m["thr"] == float(thr_s[k]) and m["dsp"] == float(dsp[k])
+
+
+def test_unknown_frontier_mode_raises():
+    ev = _FakeEv(mode="hypervolume")
+    with pytest.raises(ValueError):
+        frontier_hw_metrics(ev, _frontier([10.0, 100.0], [1e-9, 4e-9]))
+
+
 @pytest.mark.slow
 def test_hw_aware_search_beats_software_only(evaluator):
     """Fig. 5: at equal iteration budget, the hardware-aware objective finds
@@ -117,3 +233,34 @@ def test_hw_aware_search_beats_software_only(evaluator):
     # running_best is monotone in score
     rb = hw.running_best("score")
     assert all(b >= a - 1e-12 for a, b in zip(rb, rb[1:]))
+
+
+def test_cnn_tpu_path_derives_s_w_tile_from_pruned_weights():
+    """On a TPUModel the CNN evaluator prunes tile-structured and MEASURES
+    s_w_tile on the pruned weights (ROADMAP item; DESIGN.md §12) — no
+    synthetic targets."""
+    from repro.core import pruning
+    from repro.core.perf_model import TPUModel
+    cfg = reduce_config(RESNET18)
+    params = cnn.init_params(cfg, RNG)
+    images = jax.random.normal(RNG, (4, cfg.img_res, cfg.img_res, 3))
+    tpu = TPUModel()
+    ev = CNNEvaluator(cfg, params, images, tpu, budget=tpu.chip_budget,
+                      dse_iters=150)
+    assert ev.tiled
+    x = np.full(2 * len(ev.prunable), 0.6)
+    layers = ev.sparse_layers(x)
+    pr = [l for l in layers if l.prunable]
+    assert all(0.0 <= l.s_w_tile <= 1.0 for l in pr)
+    assert any(l.s_w_tile > 0.0 for l in pr)
+    # s_w_tile is the measured all-zero-tile fraction of the actual pruned
+    # weights, cross-checked against pruning.tile_sparsity
+    w = params[ev.names[0]]["w"]
+    w2, frac = pruning.tile_prune(w, 0.6)
+    assert float(frac) == pytest.approx(pruning.tile_sparsity(w2))
+    assert pr[0].s_w_tile == pytest.approx(float(frac))
+    # metrics flow through Eq. 6 with tile-granular compute skipping
+    m = ev(x)
+    assert m["thr"] > 0 and 0.0 <= m["dsp"] <= 1.0 + 1e-6
+    m_dense = ev(np.zeros(2 * len(ev.prunable)))
+    assert m["thr"] >= m_dense["thr"]

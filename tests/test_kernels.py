@@ -88,3 +88,44 @@ def test_property_clip_idempotent_and_counts(m, k, tau):
     y2, cnt2 = ops.act_clip(y, tau)
     np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
     assert int(cnt) == int(cnt2) == int(np.sum(np.asarray(y) == 0.0))
+
+
+# --------------------------------------------------------------------- #
+# Vectorized + memoized schedule builder (DESIGN.md §12)
+# --------------------------------------------------------------------- #
+def test_build_tile_schedule_matches_reference_loop():
+    from repro.kernels.block_sparse_matmul import _build_tile_schedule_ref
+    rng = np.random.default_rng(0)
+    for _ in range(60):
+        kt = int(rng.integers(1, 40))
+        nt = int(rng.integers(1, 40))
+        mask = rng.random((kt, nt)) < rng.uniform(0.0, 1.0)
+        c1, i1 = build_tile_schedule(mask)
+        c2, i2 = _build_tile_schedule_ref(mask)
+        assert np.array_equal(c1, c2)
+        assert np.array_equal(i1, i2)
+
+
+def test_build_tile_schedule_memoizes_per_mask_content():
+    from repro.kernels.block_sparse_matmul import _SCHEDULE_CACHE
+    rng = np.random.default_rng(1)
+    mask = rng.random((12, 9)) < 0.4
+    _SCHEDULE_CACHE.clear()
+    a = build_tile_schedule(mask)
+    b = build_tile_schedule(mask.copy())       # same content, new array
+    assert a[0] is b[0] and a[1] is b[1]       # dict hit, shared arrays
+    assert len(_SCHEDULE_CACHE) == 1
+    # different content is a different entry
+    mask2 = mask.copy()
+    mask2[0, 0] = not mask2[0, 0]
+    build_tile_schedule(mask2)
+    assert len(_SCHEDULE_CACHE) == 2
+
+
+def test_schedule_cache_is_bounded():
+    from repro.kernels import block_sparse_matmul as bsm
+    rng = np.random.default_rng(2)
+    bsm._SCHEDULE_CACHE.clear()
+    for _ in range(bsm._SCHEDULE_CACHE_MAX + 10):
+        build_tile_schedule(rng.random((6, 6)) < 0.5)
+    assert len(bsm._SCHEDULE_CACHE) <= bsm._SCHEDULE_CACHE_MAX

@@ -270,3 +270,44 @@ def test_hass_search_runs_end_to_end_on_lm_evaluator():
                            cut_points=thin_cut_points(
                                lm_block_bounds(layers), 6))
     assert r.steady_throughput > 0
+
+
+# --------------------------------------------------------------------- #
+# Accelerated evaluator path == seed path, bit for bit (DESIGN.md §12)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mixtral-8x7b"])
+def test_lm_evaluator_accel_matches_baseline_bitwise(arch):
+    cfg = get_config(arch)
+    tpu = TPUModel()
+    kw = dict(dse_iters=150)
+    ev_a = LMEvaluator(cfg, tpu, tpu.chip_budget, accel=True, **kw)
+    ev_b = LMEvaluator(cfg, tpu, tpu.chip_budget, accel=False,
+                       dse_engine="flat", **kw)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        x = rng.uniform(0.0, 0.9, ev_a.n_search)
+        assert ev_a(x) == ev_b(x)
+    assert ev_a.dse_cache.stats()["cold_runs"] >= 1
+
+
+def test_lm_realize_matches_sparse_layers_s_eff():
+    """The vectorized realization must produce the exact floats the
+    LayerCost path hands to ``hw.effective_sparsity``."""
+    for hw in (TPUModel(), FPGAModel()):
+        ev = LMEvaluator(get_config("qwen3-0.6b"), hw, 512.0, dse_iters=50)
+        rng = np.random.default_rng(1)
+        x = rng.uniform(0.0, 0.9, 2 * ev.n_search)
+        _, _, s_eff = ev._realize(x)
+        via_layers = np.array([hw.effective_sparsity(l)
+                               for l in ev.sparse_layers(x)])
+        assert np.array_equal(s_eff, via_layers)
+
+
+def test_lm_search_cache_reuses_across_repeated_proposals():
+    ev = LMEvaluator(get_config("qwen3-0.6b"), TPUModel(), 512.0,
+                     dse_iters=100)
+    x = np.full(ev.n_search, 0.4)
+    m1 = ev(x)
+    m2 = ev(np.array(x))
+    assert m1 == m2
+    assert ev.dse_cache.stats()["hits"] >= 1

@@ -90,3 +90,78 @@ def test_tpe_beats_random_on_quadratic():
         rng = np.random.default_rng(seed)
         rand_scores.append(max(f(rng.uniform(lo, hi)) for _ in range(60)))
     assert np.mean(tpe_scores) > np.mean(rand_scores)
+
+
+# --------------------------------------------------------------------- #
+# Presorted quantile tables + tile-structured pruning (DESIGN.md §12)
+# --------------------------------------------------------------------- #
+def test_sorted_quantile_bit_matches_jnp_quantile():
+    """The accel path's whole claim: a gather from a presorted table is the
+    SAME floats jnp.quantile computes — across sizes and traced q."""
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    f_ref = jax.jit(lambda a, q: jnp.quantile(jnp.abs(a), q))
+    f_new = jax.jit(pruning.sorted_quantile)
+    for n in (17, 1000, 65536):
+        a = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        asort = pruning.sorted_abs(a)
+        for q in rng.uniform(0, 1, 64).astype(np.float32):
+            assert float(f_ref(a, jnp.float32(q))) == \
+                float(f_new(asort, jnp.float32(q))), (n, q)
+
+
+def test_threshold_for_sparsity_sorted_matches_unsorted():
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32))
+    asort = pruning.sorted_abs(w)
+    f_a = jax.jit(pruning.threshold_for_sparsity_sorted)
+    f_b = jax.jit(pruning.threshold_for_sparsity)
+    for s in (0.0, 0.2, 0.55, 0.95, 1.0):
+        assert float(f_a(asort, jnp.float32(s))) == \
+            float(f_b(w, jnp.float32(s)))
+    # zero-target floor preserved
+    assert float(f_a(asort, jnp.float32(-0.1))) == 0.0
+
+
+def test_tile_prune_produces_aligned_all_zero_tiles():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(256, 384)).astype(np.float32))
+    for target in (0.25, 0.5, 0.75):
+        w2, frac = pruning.tile_prune(w, target)
+        frac = float(frac)
+        # realized fraction is measured, tile-granular, near the target
+        assert abs(frac - target) <= 1.0 / 6 + 1e-6
+        assert frac == pytest.approx(pruning.tile_sparsity(w2, 128, 128))
+        # zeroed tiles are fully zero and 128-aligned
+        t = np.asarray(w2).reshape(2, 128, 3, 128)
+        zero_tiles = ~np.any(t != 0, axis=(1, 3))
+        assert zero_tiles.sum() == round(frac * 6)
+        # surviving weights are untouched
+        keep = np.repeat(np.repeat(~zero_tiles, 128, 0), 128, 1)
+        assert np.array_equal(np.asarray(w2)[keep], np.asarray(w)[keep])
+
+
+def test_tile_prune_zero_target_is_identity():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(130, 200)).astype(np.float32))
+    w2, frac = pruning.tile_prune(w, 0.0)
+    assert np.array_equal(np.asarray(w2), np.asarray(w))
+    assert float(frac) == 0.0
+
+
+def test_tile_prune_non_2d_weights_flatten_leading_dims():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.normal(size=(3, 3, 32, 128)).astype(np.float32))
+    w2, frac = pruning.tile_prune(w, 0.5)
+    assert w2.shape == w.shape
+    assert 0.0 <= float(frac) <= 1.0
+    # the ragged boundary tile (mostly zero padding) ranks lowest and is
+    # pruned first, so the ELEMENT zero fraction can sit well under the
+    # tile fraction — it just has to be non-trivial
+    assert float(jnp.mean(w2 == 0.0)) > 0.05
