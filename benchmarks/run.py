@@ -18,14 +18,17 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-budget searches (96 TPE iters)")
     ap.add_argument("--only", default=None,
-                    help="comma list: kernels,fig4,fig6,fig5,fig1,table2,roofline")
+                    help="comma list: kernels,fig4,fig6,fig5,fig1,table2,"
+                         "roofline,dse,lm_dse,search,sim")
     args = ap.parse_args()
     iters = 96 if args.full else 10
     t2_iters = 24 if args.full else 8
+    smoke = not args.full
 
-    from benchmarks import (fig1_frontier, fig4_dse_allocation,
+    from benchmarks import (dse_bench, fig1_frontier, fig4_dse_allocation,
                             fig5_search_compare, fig6_speedup, kernels_bench,
-                            roofline_report, table2_models)
+                            lm_dse_bench, roofline_report, search_bench,
+                            sim_bench, table2_models)
     jobs = [
         ("kernels", lambda: kernels_bench.run()),
         ("fig4", lambda: fig4_dse_allocation.run()),
@@ -34,6 +37,11 @@ def main() -> None:
         ("fig5", lambda: fig5_search_compare.run(iters=iters)),
         ("table2", lambda: table2_models.run(iters=t2_iters)),
         ("roofline", lambda: roofline_report.run()),
+        # engine/system gates (hard asserts; --full drops the smoke subsets)
+        ("dse", lambda: dse_bench.run()),
+        ("lm_dse", lambda: lm_dse_bench.run(smoke=smoke)),
+        ("search", lambda: search_bench.run(smoke=smoke)),
+        ("sim", lambda: sim_bench.run(smoke=smoke)),
     ]
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -1,0 +1,124 @@
+"""Deployment simulation demo (DESIGN.md §13): search -> partition ->
+simulate -> SLO-aware pick.
+
+Runs a quick LM sparsity search, partitions the best stack across chips
+with the analytic max-min DP, then replays a bursty (MMPP) request trace
+through the discrete-event simulator and lets ``objective="slo"`` re-pick
+the cuts against a p99 latency target. Optionally closes the loop inside
+the search itself (``--lat-weight``): proposals are scored with a
+simulated-latency Eq. 6 term via ``SimLatencyEvaluator``.
+
+    PYTHONPATH=src python examples/deploy_sim.py --config qwen3_0_6b --chips 4
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="qwen3_0_6b")
+    ap.add_argument("--chips", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=8, help="TPE iterations")
+    ap.add_argument("--requests", type=int, default=600,
+                    help="trace length (requests)")
+    ap.add_argument("--util", type=float, default=0.45,
+                    help="mean offered load as a fraction of the max-min "
+                         "pick's steady rate")
+    ap.add_argument("--req-tokens", type=int, default=32,
+                    help="decode tokens per request")
+    ap.add_argument("--slo-x", type=float, default=3.0,
+                    help="p99 SLO as a multiple of the single-chip "
+                         "service time per request")
+    ap.add_argument("--max-cuts", type=int, default=10)
+    ap.add_argument("--dse-iters", type=int, default=200)
+    ap.add_argument("--lat-weight", type=float, default=0.0,
+                    help="> 0 adds the simulated-latency Eq. 6 term to the "
+                         "search itself (SimLatencyEvaluator)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.dse import DSECache, partition_pipeline
+    from repro.core.hass import Lambdas, LMEvaluator, hass_search
+    from repro.core.perf_model import (TPUModel, lm_block_bounds,
+                                       thin_cut_points)
+    from repro.sim import (SLO, SimLatencyEvaluator, mmpp_trace,
+                           request_rate, simulate_partition)
+
+    cfg = get_config(args.config)
+    tpu = TPUModel(chips=max(args.chips, 2))
+    ev = LMEvaluator(cfg, tpu, tpu.chip_budget, dse_iters=args.dse_iters)
+    res = hass_search(ev, ev.n_search, iters=args.iters, seed=args.seed,
+                      include_act=False, batch_size=4)
+    layers = ev.sparse_layers(res.best_x)
+    cut_points = thin_cut_points(lm_block_bounds(layers), args.max_cuts)
+    print(f"{cfg.name}: best proposal acc={res.best_metrics['acc']:.3f} "
+          f"thr={res.best_metrics['thr']:.1f} tok/s "
+          f"({len(layers)} workloads, {len(cut_points)} candidate cuts)")
+
+    cache = DSECache()
+    kw = dict(n_parts=tpu.chips, batch=args.req_tokens,
+              dse_iters=args.dse_iters, cut_points=cut_points, cache=cache)
+    mm = partition_pipeline(layers, tpu, tpu.chip_budget,
+                            objective="maxmin", **kw)
+
+    # offered load: bursty MMPP at --util of the max-min steady rate
+    rate = request_rate(mm.steady_throughput, args.util, args.req_tokens)
+    trace = mmpp_trace(args.requests, 0.6 * rate, 3.0 * rate,
+                       dwell_base=4.0 / rate, dwell_burst=1.0 / rate,
+                       sizes=args.req_tokens, seed=args.seed)
+    print(f"trace: {trace.kind}, {len(trace)} requests x "
+          f"{args.req_tokens} tok, offered "
+          f"{trace.offered_load * tpu.freq:.0f} tok/s "
+          f"({trace.offered_load / mm.steady_throughput:.0%} of max-min "
+          f"steady rate)")
+
+    one = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=1,
+                             batch=args.req_tokens, dse_iters=args.dse_iters,
+                             cut_points=cut_points, cache=cache,
+                             objective="sum")
+    slo = SLO(target=args.slo_x * args.req_tokens / one.part_throughput[0],
+              quantile=99.0)
+    print(f"SLO: p99 <= {slo.target / tpu.freq * 1e3:.2f} ms")
+
+    t0 = time.perf_counter()
+    sl = partition_pipeline(layers, tpu, tpu.chip_budget, objective="slo",
+                            slo=slo, trace=trace, **kw)
+    dt = time.perf_counter() - t0
+    for tag, p in (("maxmin", mm), ("slo", sl)):
+        rep = p.sim_report if p.sim_report is not None else \
+            simulate_partition(layers, tpu, p, trace)
+        print(f"  {tag:6s}: cuts={p.cuts} "
+              f"steady={p.steady_throughput * tpu.freq:8.1f} tok/s  "
+              f"sim p50/p99={rep.p50 / tpu.freq * 1e3:6.2f}/"
+              f"{rep.p99 / tpu.freq * 1e3:6.2f} ms  "
+              f"util={np.round(rep.utilization, 2)}")
+    st = cache.stats()
+    print(f"  slo pick in {dt:.1f}s; shared DSECache: {st['cold_runs']} "
+          f"cold, {st['hits']} exact + {st['warm_hits']} warm reuses")
+
+    if args.lat_weight > 0:
+        print(f"\nsearch with simulated-latency term "
+              f"(lambda_lat={args.lat_weight}):")
+        sev = SimLatencyEvaluator(
+            LMEvaluator(cfg, tpu, tpu.chip_budget, dse_iters=args.dse_iters),
+            tpu, tpu.chip_budget, trace=trace, slo=slo,
+            n_parts=tpu.chips, batch=args.req_tokens,
+            dse_iters=args.dse_iters, cut_points=cut_points)
+        res2 = hass_search(sev, sev.n_search, iters=args.iters,
+                           seed=args.seed, include_act=False,
+                           lambdas=Lambdas(lat=args.lat_weight))
+        m = res2.best_metrics
+        print(f"  best: acc={m['acc']:.3f} thr={m['thr']:.1f} tok/s "
+              f"sim p99={m['lat_cycles'] / tpu.freq * 1e3:.2f} ms "
+              f"(lat={m['lat']:.2f}x SLO, score={m['score']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -914,6 +914,10 @@ class PartitionResult:
     #                                 partition rates and ICI hop rates
     dse_calls: int = 0            # segment DSE invocations (memoized table)
     objective: str = "sum"        # DP objective that picked the cuts
+    chip_budgets: Optional[List[float]] = None   # per-stage DSE budgets
+    #                                 (heterogeneous slices; DESIGN.md §13)
+    sim_report: Optional[object] = None   # SimReport of the winning
+    #                                 candidate when objective="slo"
 
 
 def boundary_activations(layers: Sequence[LayerCost], cut: int) -> float:
@@ -954,41 +958,71 @@ class SegmentTable:
         self.layers = list(layers)
         self.hw, self.budget = hw, budget
         self.batch, self.dse_iters = batch, dse_iters
-        self._cache: Dict[Tuple[int, int], ParetoFrontier] = {}
+        self._cache: Dict[Tuple[int, int, float], ParetoFrontier] = {}
         self.dse_calls = 0
         self.shared = cache
 
-    def frontier(self, i: int, j: int) -> ParetoFrontier:
-        key = (i, j)
+    def frontier(self, i: int, j: int,
+                 budget: Optional[float] = None) -> ParetoFrontier:
+        """Per-segment frontier at ``budget`` (the table's own budget when
+        None). Heterogeneous slices query the same segment at several
+        per-chip budgets — each (i, j, budget) is searched at most once, and
+        a shared ``DSECache`` dedupes across tables by the same key."""
+        b = self.budget if budget is None else float(budget)
+        key = (i, j, b)
         if key not in self._cache:
             self.dse_calls += 1
             if self.shared is not None:
-                r = self.shared.dse(self.layers[i:j], self.hw, self.budget,
+                r = self.shared.dse(self.layers[i:j], self.hw, b,
                                     max_iters=self.dse_iters)
             else:
-                r = incremental_dse(self.layers[i:j], self.hw, self.budget,
+                r = incremental_dse(self.layers[i:j], self.hw, b,
                                     max_iters=self.dse_iters)
             self._cache[key] = r.frontier
         return self._cache[key]
 
-    def _best(self, i: int, j: int) -> int:
-        f = self.frontier(i, j)
-        k = f.best_under(self.budget)
+    def _best(self, i: int, j: int, budget: Optional[float] = None) -> int:
+        b = self.budget if budget is None else float(budget)
+        f = self.frontier(i, j, b)
+        k = f.best_under(b)
         # infeasible budget: the resource-minimal design still runs (the
         # greedy's own behavior when it cannot afford any growth)
         return 0 if k is None else k
 
-    def throughput(self, i: int, j: int) -> float:
-        f = self.frontier(i, j)
-        return float(f.thr[self._best(i, j)])
+    def throughput(self, i: int, j: int,
+                   budget: Optional[float] = None) -> float:
+        f = self.frontier(i, j, budget)
+        return float(f.thr[self._best(i, j, budget)])
 
-    def time(self, i: int, j: int) -> float:
-        thr = self.throughput(i, j)
+    def time(self, i: int, j: int, budget: Optional[float] = None) -> float:
+        thr = self.throughput(i, j, budget)
         return self.batch / thr if thr > 0 else float("inf")
 
-    def designs(self, i: int, j: int) -> List[DesignPoint]:
-        f = self.frontier(i, j)
-        return f.materialize(self._best(i, j))
+    def designs(self, i: int, j: int,
+                budget: Optional[float] = None) -> List[DesignPoint]:
+        f = self.frontier(i, j, budget)
+        return f.materialize(self._best(i, j, budget))
+
+
+def _keep_largest(budgets: Sequence[float], p: int) -> List[float]:
+    """The ``p`` largest budgets, physical order preserved (ties keep the
+    earlier chip) — the chips a ``p``-partition deployment holds on to."""
+    idx = sorted(sorted(range(len(budgets)), key=lambda i: -budgets[i])[:p])
+    return [budgets[i] for i in idx]
+
+
+def _better_partition(a: PartitionResult, b: PartitionResult,
+                      objective: str) -> bool:
+    """Strictly-better comparison across the heterogeneous per-P runs,
+    mirroring the DP's own tie rules (maxmin ties prefer the smaller
+    amortized batch time; ascending-P iteration keeps remaining ties on
+    the fewest chips)."""
+    if objective == "maxmin":
+        if a.steady_throughput > b.steady_throughput * (1 + 1e-12):
+            return True
+        if a.steady_throughput < b.steady_throughput * (1 - 1e-12):
+            return False
+    return a.time_per_batch < b.time_per_batch * (1 - 1e-12)
 
 
 def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
@@ -997,7 +1031,12 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
                        dse_iters: int = 300,
                        cut_points: Optional[Sequence[int]] = None,
                        objective: str = "auto",
-                       cache: Optional[DSECache] = None) -> PartitionResult:
+                       cache: Optional[DSECache] = None,
+                       chip_budgets: Optional[Sequence[float]] = None,
+                       slo: Optional[object] = None,
+                       trace: Optional[object] = None,
+                       sim_kw: Optional[dict] = None,
+                       _positional: bool = False) -> PartitionResult:
     """Fold the pipeline into at most ``n_parts`` sequential partitions, each
     run with the full per-partition ``budget``. Exact DP over cut positions
     on a memoized per-segment frontier table (one DSE per contiguous
@@ -1035,6 +1074,26 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
         partition with the smaller ``time_per_batch``.
       * ``"auto"``   — ``"maxmin"`` for a multi-chip ``TPUModel``,
         ``"sum"`` otherwise (DESIGN.md §11).
+      * ``"slo"``    — simulation-in-the-loop: build the per-P sum/max-min
+        candidate partitions, simulate each against ``trace`` with the
+        discrete-event deployment simulator, and pick the best candidate
+        that meets the latency SLO (``slo``, a ``repro.sim.slo.SLO`` or a
+        p99 target in cycles); extra simulator knobs go through ``sim_kw``.
+        Delegates to ``repro.sim.slo.slo_partition_search`` (DESIGN.md §13);
+        the returned result carries its winning ``sim_report``.
+
+    ``chip_budgets`` gives each *stage* its own DSE budget on a
+    heterogeneous (mixed-generation) slice. Multi-chip only, one entry per
+    chip; defaults to ``hw.chip_budgets`` when the ``TPUModel`` declares
+    ``chip_lanes``. A deployment with P partitions keeps the P *largest*
+    chips (physical order preserved, ties to the earlier chip — a single
+    resident partition lands on the largest chip, matching
+    ``TPUModel.chip_budget``), and stage ``p`` is searched at the budget
+    of the ``p``-th kept chip. Each P is priced by its own exact
+    positional DP and the objective-best P wins (DESIGN.md §13;
+    property-tested against brute force in ``tests/test_partition_dp.py``).
+    ``_positional`` is internal: it marks one of those per-P runs, where
+    ``chip_budgets`` lists exactly the kept stage budgets.
 
     ``cut_points`` restricts the DP to a candidate set of cut indices
     (sorted, in ``1..L-1``); ``None`` allows every position. Deep LM stacks
@@ -1054,10 +1113,56 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
     """
     L = len(layers)
     multi_chip = isinstance(hw, TPUModel) and hw.chips > 1
+    if objective == "slo":
+        from repro.sim.slo import slo_partition_search
+        return slo_partition_search(
+            layers, hw, budget, slo=slo, trace=trace, n_parts=n_parts,
+            batch=batch, reconfig_cycles=reconfig_cycles,
+            dse_iters=dse_iters, cut_points=cut_points, cache=cache,
+            chip_budgets=chip_budgets, **(sim_kw or {}))
+    if slo is not None or trace is not None:
+        raise ValueError("slo=/trace= are only read by objective='slo'")
     if objective == "auto":
         objective = "maxmin" if multi_chip else "sum"
     if objective not in ("sum", "maxmin"):
         raise ValueError(f"unknown objective {objective!r}")
+    if chip_budgets is None and multi_chip and hw.chip_lanes is not None:
+        chip_budgets = hw.chip_budgets
+    if chip_budgets is not None:
+        if not multi_chip:
+            raise ValueError("chip_budgets models per-chip DSE budgets, "
+                             "which only exist for a multi-chip TPUModel")
+        chip_budgets = [float(b) for b in chip_budgets]
+        if not _positional:
+            if len(chip_budgets) != hw.chips:
+                raise ValueError(f"chip_budgets has {len(chip_budgets)} "
+                                 f"entries for {hw.chips} chips")
+            if len(set(chip_budgets)) > 1:
+                # heterogeneous: a P-partition deployment keeps the P
+                # largest chips, so each P gets its own positional DP run
+                # pinned to EXACTLY P partitions (a smaller partition count
+                # is its own loop iteration with its own kept set — letting
+                # an inner run fall back to fewer stages would price them
+                # at a prefix of the wrong kept set). One shared cache —
+                # the segment frontiers are reused across runs. The loop
+                # stops at the cut space's capacity so no run is silently
+                # capped below its kept-set size.
+                shared = DSECache() if cache is None else cache
+                kw = dict(batch=batch, reconfig_cycles=reconfig_cycles,
+                          dse_iters=dse_iters, cut_points=cut_points,
+                          objective=objective, cache=shared)
+                cp_n = len(set(int(c) for c in cut_points)) \
+                    if cut_points is not None else max(L - 1, 0)
+                p_max = max(1, min(n_parts, hw.chips, cp_n + 1))
+                best = None
+                for p in range(1, p_max + 1):
+                    r = partition_pipeline(
+                        layers, hw, budget, n_parts=p,
+                        chip_budgets=_keep_largest(chip_budgets, p),
+                        _positional=True, **kw)
+                    if best is None or _better_partition(r, best, objective):
+                        best = r
+                return best
     if objective == "maxmin" and not multi_chip:
         raise ValueError("objective='maxmin' optimizes the spatial "
                          "steady-state rate, which only exists for a "
@@ -1072,8 +1177,15 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
     m = len(cands)                # candidate boundaries incl. 0 and L
     n_parts = min(n_parts, m - 1, hw.chips) if multi_chip \
         else min(n_parts, m - 1)
+    if chip_budgets is not None:
+        n_parts = min(n_parts, len(chip_budgets))
     n_parts = max(n_parts, 1)
     seg = SegmentTable(layers, hw, budget, batch, dse_iters, cache=cache)
+
+    def stage_budget(p: int) -> float:
+        """DSE budget of stage ``p`` (1-indexed): the uniform ``budget``, or
+        the stage's resident chip on a heterogeneous slice."""
+        return chip_budgets[p - 1] if chip_budgets is not None else budget
 
     def switch_cost(cut: int) -> float:
         """Cycles charged for the transition at cut position ``cut``."""
@@ -1105,11 +1217,15 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
                     if T[p - 1][a] == INF:
                         continue
                     i = cands[a]
-                    t = T[p - 1][a] + seg.time(i, j) + \
+                    t = T[p - 1][a] + seg.time(i, j, stage_budget(p)) + \
                         (switch_cost(i) if i else 0.0)
                     if t < T[p][b]:
                         T[p][b], back[p][b] = t, a
-        best_p = min(range(1, n_parts + 1), key=lambda p: T[p][m - 1])
+        # positional hetero runs are pinned to exactly n_parts stages: the
+        # kept-chip set is sized for that count, and smaller counts belong
+        # to their own outer-loop iteration
+        p_opts = (n_parts,) if _positional else range(1, n_parts + 1)
+        best_p = min(p_opts, key=lambda p: T[p][m - 1])
         score = [T[p][m - 1] for p in range(n_parts + 1)]
     else:
         # R[p][b]: max achievable min-rate (stage rates and internal ICI
@@ -1127,21 +1243,25 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
                     if R[p - 1][a] == -INF:
                         continue
                     i = cands[a]
-                    r = min(R[p - 1][a], seg.throughput(i, j))
+                    r = min(R[p - 1][a],
+                            seg.throughput(i, j, stage_budget(p)))
                     if i:
                         r = min(r, hop_rate(i))
                     if r > R[p][b]:
                         R[p][b], back[p][b] = r, a
-        # ties on the steady rate prefer the smaller amortized batch time
-        best_rate = max(R[p][m - 1] for p in range(1, n_parts + 1))
-        tied = [p for p in range(1, n_parts + 1)
+        # ties on the steady rate prefer the smaller amortized batch time;
+        # positional hetero runs are pinned to exactly n_parts stages (see
+        # the sum branch)
+        p_opts = (n_parts,) if _positional else range(1, n_parts + 1)
+        best_rate = max(R[p][m - 1] for p in p_opts)
+        tied = [p for p in p_opts
                 if R[p][m - 1] >= best_rate * (1 - 1e-12)]
 
         def _amortized(p: int) -> float:
             total, b = 0.0, m - 1
             for q in range(p, 0, -1):
                 a = back[q][b]
-                total += seg.time(cands[a], cands[b]) + \
+                total += seg.time(cands[a], cands[b], stage_budget(q)) + \
                     (switch_cost(cands[a]) if cands[a] else 0.0)
                 b = a
             return total
@@ -1157,13 +1277,16 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
         b = a
     cuts.reverse()
     bounds = [0] + cuts + [L]
-    part_thr = [seg.throughput(a, b) for a, b in zip(bounds, bounds[1:])]
-    part_designs = [seg.designs(a, b) for a, b in zip(bounds, bounds[1:])]
+    part_thr = [seg.throughput(a, b, stage_budget(s + 1))
+                for s, (a, b) in enumerate(zip(bounds, bounds[1:]))]
+    part_designs = [seg.designs(a, b, stage_budget(s + 1))
+                    for s, (a, b) in enumerate(zip(bounds, bounds[1:]))]
     steady = min(part_thr) if part_thr else 0.0
     if multi_chip:
         for c in cuts:
             steady = min(steady, hop_rate(c))
-    total = sum(seg.time(a, b) for a, b in zip(bounds, bounds[1:])) + \
+    total = sum(seg.time(a, b, stage_budget(s + 1))
+                for s, (a, b) in enumerate(zip(bounds, bounds[1:]))) + \
         sum(switch_cost(c) for c in cuts)
     if objective == "sum":
         assert abs(total - score[best_p]) <= 1e-9 * max(total, 1.0)
@@ -1173,7 +1296,10 @@ def partition_pipeline(layers: Sequence[LayerCost], hw: HardwareModel,
                            part_designs=part_designs,
                            steady_throughput=steady,
                            dse_calls=seg.dse_calls,
-                           objective=objective)
+                           objective=objective,
+                           chip_budgets=None if chip_budgets is None
+                           else [stage_budget(s + 1)
+                                 for s in range(len(bounds) - 1)])
 
 
 def partition_pipeline_sa(layers: Sequence[LayerCost], hw: HardwareModel,

@@ -30,10 +30,17 @@ from repro.core.tpe import TPE
 class Lambdas:
     """Eq. 6 normalizing hyper-parameters (heuristic, per the paper).
     thr=0.5 keeps the hardware term subordinate to accuracy — with thr=1.0
-    a 10-iteration search can prefer a degenerate zero-accuracy corner."""
+    a 10-iteration search can prefer a degenerate zero-accuracy corner.
+
+    ``lat`` weights the simulated serving-latency term (DESIGN.md §13):
+    when an evaluator reports ``lat`` (tail latency / SLO target, e.g.
+    ``repro.sim.slo.SimLatencyEvaluator``) a hardware-aware search
+    subtracts ``lat * m["lat"]``. The default 0.0 leaves every existing
+    search bit-identical."""
     spa: float = 0.3
     thr: float = 0.5
     dsp: float = 0.3
+    lat: float = 0.0
 
 
 @dataclass
@@ -78,6 +85,9 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
       spa   in [0,1] — achieved average sparsity
       thr   >0       — modeled throughput (samples/s), normalized by caller
       dsp   >0       — resource utilization fraction in [0,1]
+    and may report ``lat`` (simulated tail latency / SLO target, e.g. from
+    ``repro.sim.slo.SimLatencyEvaluator``) — subtracted with weight
+    ``lambdas.lat`` in a hardware-aware search (DESIGN.md §13).
     x layout: [s_w_0..s_w_{L-1}] (+ [s_a_0..s_a_{L-1}] when include_act).
 
     When the evaluator exposes a ``lambdas`` attribute (``CNNEvaluator``), a
@@ -112,6 +122,8 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
         score = m["acc"] + lambdas.spa * m["spa"]
         if hardware_aware:
             score += lambdas.thr * m["thr_norm"] - lambdas.dsp * m["dsp"]
+            if lambdas.lat and "lat" in m:
+                score -= lambdas.lat * m["lat"]
         m["score"] = score
         result.trials.append(Trial(x=x, score=score, metrics=m))
         if score > result.best_score:

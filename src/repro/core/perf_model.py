@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -181,10 +181,16 @@ class TPUModel(HardwareModel):
     on one chip (a mesh program does not span chips), so per-partition DSE
     runs against ``chip_budget`` and the partition handoff is an ICI transfer
     of the boundary activations (``ici_transfer_cycles``) instead of an FPGA
-    full reconfiguration — DESIGN.md §10."""
+    full reconfiguration — DESIGN.md §10.
+
+    ``chip_lanes`` models a *heterogeneous* (mixed-generation) slice: per-chip
+    tile-lane budgets, one entry per chip. ``chip_budgets`` expands either
+    spelling to the per-chip tuple the max-min DP's budget lookup reads
+    (``partition_pipeline(chip_budgets=...)`` — DESIGN.md §13)."""
     freq: float = 940e6           # v5e MXU clock
     chips: int = 1
     lanes_per_chip: int = 4 * 128  # 4 MXUs x 128 rows
+    chip_lanes: Optional[Sequence[float]] = None   # per-chip lane budgets
 
     def effective_sparsity(self, l: LayerCost) -> float:
         return l.s_pair_tile if l.prunable else 0.0
@@ -194,12 +200,29 @@ class TPUModel(HardwareModel):
 
     @property
     def budget(self) -> float:
-        return self.chips * self.lanes_per_chip
+        return float(sum(self.chip_budgets))
+
+    @property
+    def chip_budgets(self) -> Tuple[float, ...]:
+        """Per-chip tile-lane budgets. Uniform ``lanes_per_chip`` unless the
+        slice is heterogeneous (``chip_lanes``); pipeline stage ``p`` is
+        resident on chip ``p``, so the DP prices segment DSEs against the
+        stage's own chip."""
+        if self.chip_lanes is not None:
+            if len(self.chip_lanes) != self.chips:
+                raise ValueError(
+                    f"chip_lanes has {len(self.chip_lanes)} entries for "
+                    f"{self.chips} chips")
+            return tuple(float(b) for b in self.chip_lanes)
+        return (float(self.lanes_per_chip),) * self.chips
 
     @property
     def chip_budget(self) -> float:
-        """Tile-lane budget of a single chip (one resident partition)."""
-        return float(self.lanes_per_chip)
+        """Tile-lane budget of a single chip (one resident partition). On a
+        heterogeneous slice this is the largest chip — the one a single
+        resident partition would land on; per-stage budgets go through
+        ``chip_budgets``."""
+        return max(self.chip_budgets)
 
     def ici_transfer_cycles(self, n_bytes: float) -> float:
         """MXU cycles to move ``n_bytes`` across one chip-to-chip hop, all

@@ -39,6 +39,18 @@ class Request:
     out: List[int] = None
 
 
+def requests_from_trace(trace, *, vocab_size: int, prompt_len: int = 8,
+                        seed: int = 0) -> List[Request]:
+    """Materialize a simulator ``Trace`` (``repro.sim.trace``) into
+    ``ServeSession`` requests: one request per trace entry, decoding as
+    many new tokens as the entry's sample count — the same seeded traffic
+    the deployment simulator scores analytically can drive the real
+    serving loop (DESIGN.md §13)."""
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, vocab_size, size=prompt_len),
+                    max_new=int(sz)) for sz in trace.sizes]
+
+
 class ServeSession:
     """Fixed-slot continuous batching (tiny vLLM-style front end)."""
 
@@ -73,6 +85,30 @@ class ServeSession:
                 gen.append(cur)
             seq = np.concatenate([np.asarray(g) for g in gen], axis=1)
             outs.extend([list(map(int, row)) for row in seq])
+        return outs
+
+    def replay_trace(self, trace, *, vocab_size: int, prompt_len: int = 8,
+                     seed: int = 0) -> List[List[int]]:
+        """Serve a simulator ``Trace``'s request *mix* closed-loop: the
+        trace contributes the request count and per-request decode lengths
+        (its size buckets), served back to back. Requests are grouped by
+        decode length (ragged lengths would force per-request jit shapes)
+        and each group runs through the continuous-batching ``generate``
+        loop; outputs return in trace order. Arrival times — burstiness —
+        are NOT replayed: open-loop admission timing is the deployment
+        simulator's job (``repro.sim.engine``); this method shares the
+        workload definition so the two score the same requests."""
+        reqs = requests_from_trace(trace, vocab_size=vocab_size,
+                                   prompt_len=prompt_len, seed=seed)
+        by_len: Dict[int, List[int]] = {}
+        for i, r in enumerate(reqs):
+            by_len.setdefault(r.max_new, []).append(i)
+        outs: List[Optional[List[int]]] = [None] * len(reqs)
+        for max_new, idx in sorted(by_len.items()):
+            got = self.generate([reqs[i].prompt for i in idx],
+                                max_new=max_new)
+            for i, o in zip(idx, got):
+                outs[i] = o
         return outs
 
     def _sample(self, logits) -> jnp.ndarray:

@@ -1,0 +1,23 @@
+"""Discrete-event deployment simulator (DESIGN.md §13).
+
+The layer between search and serving: seeded request traces
+(``sim.trace``), an event-driven simulator of a partitioned multi-chip
+dataflow deployment (``sim.engine``), and SLO-aware partition selection
+(``sim.slo`` — wired into ``partition_pipeline(objective="slo")`` and the
+``hass_search`` Eq. 6 lambdas).
+"""
+from repro.sim.engine import (SIM_TOL, SimReport, saturation_throughput,
+                              simulate_partition)
+from repro.sim.slo import (SLO, SimLatencyEvaluator, latency_percentile,
+                           slo_partition_search)
+from repro.sim.trace import (Trace, backlogged_trace, bucket_sizes,
+                             diurnal_trace, mmpp_trace, poisson_trace,
+                             replay_trace, request_rate)
+
+__all__ = [
+    "SIM_TOL", "SimReport", "saturation_throughput", "simulate_partition",
+    "SLO", "SimLatencyEvaluator", "latency_percentile",
+    "slo_partition_search", "Trace", "backlogged_trace", "bucket_sizes",
+    "diurnal_trace", "mmpp_trace", "poisson_trace", "replay_trace",
+    "request_rate",
+]

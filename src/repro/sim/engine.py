@@ -1,0 +1,308 @@
+"""Event-driven simulator of a partitioned dataflow deployment (DESIGN.md §13).
+
+``simulate_partition`` replays a request ``Trace`` through the deployment a
+``PartitionResult`` describes, as a chain of serial servers with finite
+FIFO queues and blocking-after-service backpressure:
+
+  * **spatial** mode (multi-chip ``TPUModel``): one server per resident
+    stage (service time = request samples / the stage's DSE rate),
+    interleaved with one server per ICI hop (service time = samples x the
+    cut's per-sample transfer cycles — the same expression whose
+    reciprocal ``partition_pipeline`` min's into ``steady_throughput``).
+    Every internal queue holds at most ``q_depth`` waiting requests; a
+    server that cannot hand off downstream *blocks* and stalls its own
+    upstream — finite activation buffers, not infinite queues.
+  * **temporal** mode (single-chip / FPGA reconfiguration schedule): one
+    executor runs the partitions back to back per request and stalls for
+    every partition *switch* (``reconfig_cycles``, or the ICI batch
+    transfer on a multi-chip model forced temporal). A single resident
+    partition incurs zero switch stalls — the same accounting
+    ``partition_pipeline`` charges (P - 1 switches, none for P = 1).
+
+The simulator is deterministic: all randomness lives in the (seeded)
+trace, and simultaneous events resolve in FIFO insertion order.
+
+**Sim-vs-analytic contract** (the subsystem's bit-exactness-style gate,
+property-tested in ``tests/test_sim.py`` and gated in
+``benchmarks/sim_bench.py``): under a backlogged trace the simulator's
+steady completion rate equals the analytic model within ``SIM_TOL`` —
+``steady_throughput`` in spatial mode, and the amortized temporal
+``throughput`` in temporal mode when request size equals the partition
+batch. Deterministic service admits no looser answer: the bottleneck
+server is never starved or blocked at saturation, so windowed completion
+spacing telescopes to the analytic bottleneck rate up to float
+accumulation.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.dse import PartitionResult, boundary_activations
+from repro.core.perf_model import (ACT_BYTES, HardwareModel, LayerCost,
+                                   TPUModel)
+from repro.sim.trace import Trace, backlogged_trace
+
+# Documented sim-vs-analytic saturation tolerance (relative). Measured
+# deviations are float-accumulation level (~1e-12); the slack is margin,
+# not permission for modeling drift.
+SIM_TOL = 1e-6
+
+
+@dataclass
+class SimReport:
+    """What one simulated deployment did. Times are cycles; node arrays
+    are indexed by ``node_names`` (stages and ICI links interleaved in
+    pipeline order; a single ``executor`` node in temporal mode). The
+    queue in front of node 0 is the unbounded admission queue — its
+    occupancy is the request backlog."""
+    mode: str
+    node_names: List[str]
+    arrivals: np.ndarray          # (N,)
+    sizes: np.ndarray             # (N,) samples per request
+    completions: np.ndarray       # (N,)
+    latency: np.ndarray           # (N,) completion - arrival
+    busy: np.ndarray              # (M,) service cycles per node
+    blocked: np.ndarray           # (M,) backpressure-blocked cycles
+    queue_mean: np.ndarray        # (M,) time-weighted mean occupancy
+    queue_max: np.ndarray         # (M,) peak occupancy
+    switch_stalls: int = 0        # partition switches charged (temporal)
+    switch_stall_cycles: float = 0.0
+
+    @property
+    def completed(self) -> int:
+        return len(self.completions)
+
+    @property
+    def total_samples(self) -> int:
+        return int(self.sizes.sum())
+
+    @property
+    def horizon(self) -> float:
+        """Cycles from t=0 to the last completion."""
+        return float(self.completions.max()) if self.completed else 0.0
+
+    @property
+    def achieved_throughput(self) -> float:
+        """Samples completed per cycle over the whole horizon (includes
+        warmup fill and final drain — the deployment's actual rate)."""
+        h = self.horizon
+        return self.total_samples / h if h > 0 else 0.0
+
+    @property
+    def utilization(self) -> np.ndarray:
+        """Per-node busy fraction of the horizon."""
+        h = self.horizon
+        return self.busy / h if h > 0 else np.zeros_like(self.busy)
+
+    def latency_percentile(self, quantile: float) -> float:
+        """Per-request latency percentile, ``quantile`` in 0..100."""
+        return float(np.percentile(self.latency, quantile))
+
+    @property
+    def p50(self) -> float:
+        return self.latency_percentile(50.0)
+
+    @property
+    def p95(self) -> float:
+        return self.latency_percentile(95.0)
+
+    @property
+    def p99(self) -> float:
+        return self.latency_percentile(99.0)
+
+    def windowed_throughput(self, warmup: float = 0.5) -> float:
+        """Steady completion rate: samples/cycle between the completion at
+        the ``warmup`` fraction of the request count and the last one —
+        drops pipeline-fill transients, the saturation measurement the
+        sim-vs-analytic contract gates. Traces with fewer than two
+        completions have no window; fall back to the whole-horizon rate."""
+        if self.completed < 2:
+            return self.achieved_throughput
+        order = np.argsort(self.completions, kind="stable")
+        C = self.completions[order]
+        S = self.sizes[order].astype(np.float64)
+        k0 = min(max(int(len(C) * warmup), 0), len(C) - 2)
+        dt = float(C[-1] - C[k0])
+        return float(S[k0 + 1:].sum()) / dt if dt > 0 else float("inf")
+
+
+def _simulate_chain(arrivals: np.ndarray, sizes: np.ndarray,
+                    service: Sequence[Callable[[int], float]],
+                    caps: Sequence[int]):
+    """Core event loop: a chain of M serial servers, FIFO queues of
+    capacity ``caps[m]`` in front of each (``caps[0]`` is the unbounded
+    admission queue), blocking-after-service handoff. Returns
+    (completions, busy, blocked, queue_mean, queue_max)."""
+    N, M = len(arrivals), len(service)
+    queue = [deque() for _ in range(M)]
+    serving: List[Optional[int]] = [None] * M
+    held: List[Optional[int]] = [None] * M    # finished, blocked downstream
+    block_t = [0.0] * M
+    busy = [0.0] * M
+    blocked = [0.0] * M
+    completions = np.zeros(N, dtype=np.float64)
+    q_int = [0.0] * M          # time-weighted occupancy integral
+    q_t = [0.0] * M
+    q_max = [0] * M
+
+    # (time, seq, node, request): arrivals pre-seeded with node=-1 and
+    # seq=request index; FINISH events get monotonically later seqs, so
+    # simultaneous events resolve deterministically in insertion order
+    events = [(float(arrivals[i]), i, -1, i) for i in range(N)]
+    heapq.heapify(events)
+    seq = N
+
+    def q_touch(m: int, t: float) -> None:
+        q_int[m] += len(queue[m]) * (t - q_t[m])
+        q_t[m] = t
+
+    def q_push(m: int, t: float, i: int) -> None:
+        q_touch(m, t)
+        queue[m].append(i)
+        if len(queue[m]) > q_max[m]:
+            q_max[m] = len(queue[m])
+
+    def try_start(m: int, t: float) -> None:
+        nonlocal seq
+        if serving[m] is not None or held[m] is not None or not queue[m]:
+            return
+        q_touch(m, t)
+        i = queue[m].popleft()
+        serving[m] = i
+        dt = service[m](int(sizes[i]))
+        busy[m] += dt
+        heapq.heappush(events, (t + dt, seq, m, i))
+        seq += 1
+        if m > 0:
+            unblock(m - 1, t)      # the pop freed a slot in queue[m]
+
+    def unblock(m: int, t: float) -> None:
+        if held[m] is None or len(queue[m + 1]) >= caps[m + 1]:
+            return
+        i = held[m]
+        held[m] = None
+        blocked[m] += t - block_t[m]
+        q_push(m + 1, t, i)
+        try_start(m + 1, t)
+        try_start(m, t)
+
+    while events:
+        t, _, m, i = heapq.heappop(events)
+        if m == -1:                               # arrival
+            q_push(0, t, i)
+            try_start(0, t)
+            continue
+        serving[m] = None                         # node m finished item i
+        if m == M - 1:
+            completions[i] = t
+            try_start(m, t)
+            continue
+        if len(queue[m + 1]) < caps[m + 1]:
+            q_push(m + 1, t, i)
+            try_start(m + 1, t)
+            try_start(m, t)
+        else:
+            held[m] = i                           # backpressure
+            block_t[m] = t
+
+    horizon = float(completions.max()) if N else 0.0
+    for m in range(M):
+        q_touch(m, horizon)
+    q_mean = [q_int[m] / horizon if horizon > 0 else 0.0 for m in range(M)]
+    return completions, busy, blocked, q_mean, q_max
+
+
+def simulate_partition(layers: Sequence[LayerCost], hw: HardwareModel,
+                       partition: PartitionResult, trace: Trace, *,
+                       q_depth: int = 8, reconfig_cycles: float = 5e7,
+                       mode: str = "auto") -> SimReport:
+    """Simulate ``trace`` through the deployment ``partition`` describes
+    (stage rates from its per-stage DSE designs, ICI hops priced at the
+    cuts' boundary activations). ``mode="auto"`` picks spatial for a
+    multi-chip ``TPUModel`` — the schedule such a slice actually runs —
+    and temporal otherwise; ``reconfig_cycles`` is the temporal switch
+    stall, matching ``partition_pipeline``'s accounting."""
+    rates = [float(r) for r in partition.part_throughput]
+    cuts = list(partition.cuts)
+    if not rates or min(rates) <= 0:
+        raise ValueError("partition must carry positive part_throughput")
+    if q_depth < 1:
+        raise ValueError("q_depth must be >= 1")
+    multi_chip = isinstance(hw, TPUModel) and hw.chips > 1
+    if mode == "auto":
+        mode = "spatial" if multi_chip else "temporal"
+    if mode not in ("spatial", "temporal"):
+        raise ValueError(f"unknown mode {mode!r}")
+
+    arrivals = np.asarray(trace.arrivals, dtype=np.float64)
+    sizes = np.asarray(trace.sizes, dtype=np.int64)
+    N = len(arrivals)
+    switch_stalls = 0
+    stall_cycles = 0.0
+
+    if mode == "spatial":
+        service: List[Callable[[int], float]] = []
+        names: List[str] = []
+        for s, r in enumerate(rates):
+            service.append(lambda sz, r=r: sz / r)
+            names.append(f"stage{s}")
+            if s < len(rates) - 1:
+                hop = hw.ici_transfer_cycles(
+                    boundary_activations(layers, cuts[s]) * ACT_BYTES)
+                service.append(lambda sz, hop=hop: sz * hop)
+                names.append(f"ici{s}")
+        caps = [N + 1] + [q_depth] * (len(service) - 1)
+    else:
+        def switch_of(sz: int) -> float:
+            if multi_chip:
+                return sum(hw.ici_transfer_cycles(
+                    sz * boundary_activations(layers, c) * ACT_BYTES)
+                    for c in cuts)
+            return sum(reconfig_cycles for _ in cuts)
+
+        def service_one(sz: int) -> float:
+            # same fold order as partition_pipeline's time_per_batch:
+            # sum of stage times, then the sum of switch stalls
+            return sum(sz / r for r in rates) + switch_of(sz)
+
+        service = [service_one]
+        names = ["executor"]
+        caps = [N + 1]
+        if cuts:
+            switch_stalls = len(cuts) * N
+            stall_cycles = float(sum(switch_of(int(s)) for s in sizes))
+
+    completions, busy, blocked, q_mean, q_max = _simulate_chain(
+        arrivals, sizes, service, caps)
+    return SimReport(mode=mode, node_names=names, arrivals=arrivals,
+                     sizes=sizes, completions=completions,
+                     latency=completions - arrivals,
+                     busy=np.asarray(busy), blocked=np.asarray(blocked),
+                     queue_mean=np.asarray(q_mean),
+                     queue_max=np.asarray(q_max, dtype=np.int64),
+                     switch_stalls=switch_stalls,
+                     switch_stall_cycles=stall_cycles)
+
+
+def saturation_throughput(layers: Sequence[LayerCost], hw: HardwareModel,
+                          partition: PartitionResult, *,
+                          n_requests: int = 96, size: Optional[int] = None,
+                          q_depth: int = 8, reconfig_cycles: float = 5e7,
+                          mode: str = "auto", warmup: float = 0.5) -> float:
+    """The simulator's saturation rate: drive a backlogged trace (every
+    request queued at t=0) and measure the post-warmup completion rate.
+    This is the left side of the sim-vs-analytic contract: within
+    ``SIM_TOL`` of ``partition.steady_throughput`` (spatial) or of
+    ``partition.throughput`` when ``size`` is the partition batch
+    (temporal)."""
+    sz = int(partition.batch if size is None else size)
+    rep = simulate_partition(layers, hw, partition,
+                             backlogged_trace(n_requests, sz),
+                             q_depth=q_depth,
+                             reconfig_cycles=reconfig_cycles, mode=mode)
+    return rep.windowed_throughput(warmup)

@@ -1,0 +1,191 @@
+"""SLO-aware partition selection: simulation in the search loop (DESIGN.md §13).
+
+Percentile latency under real traffic is not decomposable over pipeline
+prefixes, so no exact DP can optimize it directly. Instead
+``slo_partition_search`` closes the loop the cheap way the analytic
+objectives already paid for: the per-P sum-form and max-min DP picks span
+the rate/latency trade-off (max-min maximizes the steady rate and happily
+takes more hops; sum minimizes total batch cycles and so avoids expensive
+boundaries), every candidate is simulated against the *same* trace, and
+the winner is the SLO-feasible candidate with the highest remaining
+*capacity* — its analytic ``steady_throughput`` (ties: lowest simulated
+tail latency, then fewer cuts). When the SLO does not bind this reduces to
+the max-min pick; when it binds (the rate-optimal partition's simulated
+tail violates the target) the search walks down the capacity order to the
+fastest deployment that still meets it. When no candidate meets the SLO
+the least-violating one is returned — degraded, not undefined. All candidates share one ``DSECache``, so the extra objective
+sweeps re-read segment frontiers instead of re-searching them.
+
+``SimLatencyEvaluator`` pushes the same term into the HASS loop itself: it
+wraps an Eq. 6 evaluator, partitions + simulates each proposal's sparse
+stack, and adds ``lat`` (tail latency / SLO target) to the metric dict —
+scored by ``hass_search`` through ``Lambdas.lat``, so the TPE can trade
+accuracy and throughput against serving latency.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.dse import DSECache, PartitionResult, partition_pipeline
+from repro.core.perf_model import HardwareModel, LayerCost, TPUModel
+from repro.sim.engine import SimReport, simulate_partition
+from repro.sim.trace import Trace
+
+
+@dataclass(frozen=True)
+class SLO:
+    """A tail-latency service-level objective: the ``quantile`` (percentile
+    in 0..100) of per-request latency must stay at or below ``target``
+    cycles."""
+    target: float
+    quantile: float = 99.0
+
+    @classmethod
+    def p99_ms(cls, ms: float, hw: HardwareModel) -> "SLO":
+        """p99 target given in milliseconds of the model's clock."""
+        return cls(target=ms * 1e-3 * hw.freq, quantile=99.0)
+
+
+def latency_percentile(report: SimReport, quantile: float = 99.0) -> float:
+    """The ``latency_percentile`` objective term: tail latency (cycles) of
+    one simulated deployment."""
+    return report.latency_percentile(quantile)
+
+
+def slo_partition_search(layers: Sequence[LayerCost], hw: HardwareModel,
+                         budget: float, *, slo, trace: Trace,
+                         n_parts: int, batch: int = 256,
+                         reconfig_cycles: float = 5e7,
+                         dse_iters: int = 300,
+                         cut_points: Optional[Sequence[int]] = None,
+                         cache: Optional[DSECache] = None,
+                         chip_budgets: Optional[Sequence[float]] = None,
+                         q_depth: int = 8,
+                         mode: str = "auto") -> PartitionResult:
+    """``partition_pipeline(objective="slo")``: pick the partitioning whose
+    *simulated* deployment meets the latency SLO (see module docstring for
+    the candidate set and selection rule). ``slo`` is an ``SLO`` or a bare
+    p99 target in cycles; ``trace`` is the offered load. The returned
+    ``PartitionResult`` has ``objective="slo"`` and carries the winning
+    candidate's ``sim_report``."""
+    if trace is None:
+        raise ValueError("objective='slo' needs trace= (the offered load)")
+    if slo is None:
+        raise ValueError("objective='slo' needs slo= (an SLO or a p99 "
+                         "target in cycles)")
+    if not isinstance(slo, SLO):
+        slo = SLO(target=float(slo))
+    multi_chip = isinstance(hw, TPUModel) and hw.chips > 1
+    cache = DSECache() if cache is None else cache
+    kw = dict(batch=batch, reconfig_cycles=reconfig_cycles,
+              dse_iters=dse_iters, cut_points=cut_points, cache=cache,
+              chip_budgets=chip_budgets)
+    objectives = ("sum", "maxmin") if multi_chip else ("sum",)
+    cands: List[PartitionResult] = []
+    seen = set()
+    for p in range(1, max(int(n_parts), 1) + 1):
+        for obj in objectives:
+            c = partition_pipeline(layers, hw, budget, n_parts=p,
+                                   objective=obj, **kw)
+            if tuple(c.cuts) not in seen:
+                seen.add(tuple(c.cuts))
+                cands.append(c)
+    sims = [simulate_partition(layers, hw, c, trace, q_depth=q_depth,
+                               reconfig_cycles=reconfig_cycles, mode=mode)
+            for c in cands]
+    lats = [latency_percentile(r, slo.quantile) for r in sims]
+
+    def capacity(c: PartitionResult) -> float:
+        # the schedule's analytic saturation rate: spatial steady rate on a
+        # multi-chip slice, amortized temporal rate otherwise
+        return c.steady_throughput if sims[0].mode == "spatial" \
+            else c.throughput
+
+    feasible = [k for k in range(len(cands)) if lats[k] <= slo.target]
+    if feasible:
+        # capacity first (analytic — deterministic, unlike the drain-time
+        # noise in a finite trace's achieved rate), then tail latency, then
+        # fewer chips
+        best = max(capacity(cands[k]) for k in feasible)
+        tied = [k for k in feasible
+                if capacity(cands[k]) >= best * (1 - 1e-12)]
+        win = min(tied, key=lambda k: (lats[k], len(cands[k].cuts), k))
+    else:
+        win = min(range(len(cands)), key=lambda k: (lats[k], k))
+    out = replace(cands[win], objective="slo")
+    out.sim_report = sims[win]
+    return out
+
+
+class SimLatencyEvaluator:
+    """Wrap an Eq. 6 evaluator (``LMEvaluator``/``CNNEvaluator``) with a
+    simulated serving-latency term. Each proposal's sparse stack is
+    partitioned (one shared ``DSECache`` across all proposals) and
+    simulated against a fixed trace; the metric dict gains
+
+      * ``lat``        — tail latency / SLO target (dimensionless; > 1
+        means the proposal violates the SLO), subtracted by ``hass_search``
+        as ``lambdas.lat * lat``;
+      * ``lat_cycles`` — the raw simulated percentile, for reports.
+
+    Everything else (``n_search``, ``sparse_layers``, ``lambdas`` sync)
+    passes through to the wrapped evaluator."""
+
+    def __init__(self, base, hw: HardwareModel, budget: float, *, trace:
+                 Trace, slo, n_parts: int, batch: int = 64,
+                 dse_iters: int = 200,
+                 cut_points: Optional[Sequence[int]] = None,
+                 objective: str = "auto", q_depth: int = 8,
+                 reconfig_cycles: float = 5e7):
+        self.base = base
+        self.hw, self.budget = hw, budget
+        self.trace = trace
+        self.slo = slo if isinstance(slo, SLO) else SLO(target=float(slo))
+        self.n_parts, self.batch = n_parts, batch
+        self.dse_iters, self.cut_points = dse_iters, cut_points
+        self.objective, self.q_depth = objective, q_depth
+        self.reconfig_cycles = reconfig_cycles
+        self.cache = DSECache(materialize_designs=True)
+
+    @property
+    def lambdas(self):
+        return self.base.lambdas
+
+    @lambdas.setter
+    def lambdas(self, v) -> None:
+        # hass_search installs its own Eq. 6 weights for the duration of a
+        # hardware-aware search; the wrapped evaluator's frontier-point
+        # selection must see them
+        self.base.lambdas = v
+
+    def __getattr__(self, name):
+        return getattr(self.base, name)
+
+    def _lat_terms(self, x) -> dict:
+        layers = self.base.sparse_layers(x)
+        p = partition_pipeline(layers, self.hw, self.budget,
+                               n_parts=self.n_parts, batch=self.batch,
+                               reconfig_cycles=self.reconfig_cycles,
+                               dse_iters=self.dse_iters,
+                               cut_points=self.cut_points,
+                               objective=self.objective, cache=self.cache)
+        rep = simulate_partition(layers, self.hw, p, self.trace,
+                                 q_depth=self.q_depth,
+                                 reconfig_cycles=self.reconfig_cycles)
+        lat = latency_percentile(rep, self.slo.quantile)
+        return {"lat": lat / self.slo.target, "lat_cycles": lat}
+
+    def __call__(self, x) -> dict:
+        return {**dict(self.base(x)), **self._lat_terms(x)}
+
+    def evaluate_batch(self, xs) -> List[dict]:
+        """Keeps the wrapped evaluator's vectorized batch path (one vmapped
+        prune+forward per round on the CNN evaluator) and adds the
+        simulated-latency terms per proposal."""
+        eval_batch = getattr(self.base, "evaluate_batch", None)
+        ms = eval_batch(xs) if eval_batch is not None and len(xs) > 1 \
+            else [self.base(x) for x in xs]
+        return [{**dict(m), **self._lat_terms(x)} for x, m in zip(xs, ms)]

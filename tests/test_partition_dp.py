@@ -141,6 +141,138 @@ def test_multichip_steady_rate_bounded_by_parts_and_ici():
         assert r.steady_throughput <= 1.0 / hop * (1 + 1e-12)
 
 
+# --------------------------------------------------------------------- #
+# Heterogeneous chips (per-stage DSE budgets — DESIGN.md §13)
+# --------------------------------------------------------------------- #
+def _keep_largest_oracle(budgets, p):
+    """Independent restatement of the deployment rule: a p-partition
+    deployment keeps the p largest chips, physical order preserved (ties
+    keep the earlier chip)."""
+    ranked = sorted(range(len(budgets)), key=lambda i: (-budgets[i], i))[:p]
+    return [budgets[i] for i in sorted(ranked)]
+
+
+def _hetero_bruteforce(layers, tpu, budgets, n_parts, batch, dse_iters):
+    """Exhaustive max-min steady rate over every cut subset: a k-partition
+    configuration keeps the k largest chips (physical order), stage s
+    resident on the s-th kept chip."""
+    import itertools
+
+    from repro.core.dse import boundary_activations as _ba
+    best = -np.inf
+    L = len(layers)
+    for k in range(n_parts):
+        kept = _keep_largest_oracle(budgets, k + 1)
+        for cuts in itertools.combinations(range(1, L), k):
+            bounds = [0] + list(cuts) + [L]
+            rate = min(incremental_dse(layers[a:b], tpu, kept[s],
+                                       max_iters=dse_iters).throughput
+                       for s, (a, b) in enumerate(zip(bounds, bounds[1:])))
+            for c in cuts:
+                hop = tpu.ici_transfer_cycles(_ba(layers, c) * ACT_BYTES)
+                rate = min(rate, 1.0 / hop)
+            best = max(best, rate)
+    return best
+
+
+def test_hetero_maxmin_dp_equals_bruteforce_on_small_stack():
+    layers = _sparse_layers(RESNET18)[:9]
+    tpu = TPUModel(chips=3, chip_lanes=(512.0, 192.0, 320.0))
+    r = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=3,
+                           batch=32, dse_iters=60, objective="maxmin")
+    assert r.chip_budgets == _keep_largest_oracle([512.0, 192.0, 320.0],
+                                                  len(r.cuts) + 1)
+    best = _hetero_bruteforce(layers, tpu, tpu.chip_budgets, 3, 32, 60)
+    assert r.steady_throughput == pytest.approx(best, rel=1e-12)
+
+
+def test_hetero_single_partition_lands_on_the_largest_chip():
+    """Regression (review finding): a P=1 deployment must be priced at the
+    largest chip's budget, not chip 0's, wherever the largest chip sits."""
+    layers = _sparse_layers(RESNET18)[:8]
+    small_first = TPUModel(chips=2, chip_lanes=(128.0, 640.0))
+    big_first = TPUModel(chips=2, chip_lanes=(640.0, 128.0))
+    a = partition_pipeline(layers, small_first, small_first.chip_budget,
+                           n_parts=1, batch=32, dse_iters=60,
+                           objective="maxmin")
+    b = partition_pipeline(layers, big_first, big_first.chip_budget,
+                           n_parts=1, batch=32, dse_iters=60,
+                           objective="maxmin")
+    assert a.chip_budgets == b.chip_budgets == [640.0]
+    assert a.steady_throughput == b.steady_throughput
+    lone = incremental_dse(layers, small_first, 640.0, max_iters=60)
+    assert a.part_throughput == [lone.throughput]
+
+
+def test_hetero_ordering_matters_and_dp_tracks_it():
+    """Reversing the chip order changes which segments afford growth; the
+    DP must price stage s at chip s's own budget in both orders."""
+    layers = _sparse_layers(MOBILENETV3S)[:8]
+    for lanes in ((640.0, 128.0), (128.0, 640.0)):
+        tpu = TPUModel(chips=2, chip_lanes=lanes)
+        r = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=2,
+                               batch=32, dse_iters=60, objective="maxmin")
+        best = _hetero_bruteforce(layers, tpu, tpu.chip_budgets, 2, 32, 60)
+        assert r.steady_throughput == pytest.approx(best, rel=1e-12)
+
+
+def test_hetero_inner_runs_never_price_a_kept_set_prefix():
+    """Regression (review finding): a per-P positional run must not fall
+    back to fewer partitions priced at a prefix of the p-largest chip set.
+    Adversarial slice: a tiny head layer that saturates under the small
+    leading chip makes the [small, big] prefix *look* better than any
+    rule-compliant deployment — the DP must still honor keep-largest."""
+    head = _sparse_layers(RESNET18)[:1]
+    tail = _sparse_layers(MOBILENETV3S)[:5]
+    layers = head + tail
+    tpu = TPUModel(chips=3, chip_lanes=(128.0, 600.0, 512.0))
+    r = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=3,
+                           batch=32, dse_iters=60, objective="maxmin")
+    assert r.chip_budgets == _keep_largest_oracle([128.0, 600.0, 512.0],
+                                                  len(r.cuts) + 1)
+    best = _hetero_bruteforce(layers, tpu, tpu.chip_budgets, 3, 32, 60)
+    assert r.steady_throughput == pytest.approx(best, rel=1e-12)
+
+
+def test_uniform_chip_budgets_reproduce_the_default_path_exactly():
+    layers = _sparse_layers(RESNET18)
+    tpu = TPUModel(chips=4)
+    kw = dict(n_parts=4, batch=256, dse_iters=120)
+    r0 = partition_pipeline(layers, tpu, tpu.chip_budget, **kw)
+    r1 = partition_pipeline(layers, tpu, tpu.chip_budget,
+                            chip_budgets=[tpu.chip_budget] * 4, **kw)
+    assert r0.cuts == r1.cuts
+    assert r0.time_per_batch == r1.time_per_batch
+    assert r0.steady_throughput == r1.steady_throughput
+    assert r0.part_throughput == r1.part_throughput
+
+
+def test_hetero_model_defaults_its_chip_budgets_into_the_dp():
+    layers = _sparse_layers(RESNET18)[:10]
+    tpu = TPUModel(chips=3, chip_lanes=(512.0, 192.0, 320.0))
+    kw = dict(n_parts=3, batch=32, dse_iters=60, objective="maxmin")
+    implicit = partition_pipeline(layers, tpu, tpu.chip_budget, **kw)
+    explicit = partition_pipeline(layers, tpu, tpu.chip_budget,
+                                  chip_budgets=tpu.chip_budgets, **kw)
+    assert implicit.cuts == explicit.cuts
+    assert implicit.steady_throughput == explicit.steady_throughput
+
+
+def test_chip_budget_validation():
+    layers = _sparse_layers(RESNET18)[:6]
+    with pytest.raises(ValueError, match="chip_budgets"):
+        partition_pipeline(layers, FPGAModel(), 4096.0, n_parts=2,
+                           chip_budgets=[512.0, 512.0], dse_iters=60)
+    with pytest.raises(ValueError, match="chip_budgets"):
+        partition_pipeline(layers, TPUModel(chips=3), 512.0, n_parts=3,
+                           chip_budgets=[512.0, 512.0], dse_iters=60)
+    with pytest.raises(ValueError, match="chip_lanes"):
+        TPUModel(chips=2, chip_lanes=(512.0,)).chip_budgets
+    het = TPUModel(chips=2, chip_lanes=(512.0, 128.0))
+    assert het.chip_budget == 512.0
+    assert het.budget == 640.0
+
+
 def test_singlechip_tpu_uses_plain_reconfig():
     layers = _sparse_layers(RESNET18)[:8]
     tpu = TPUModel(chips=1)
