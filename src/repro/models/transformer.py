@@ -518,8 +518,15 @@ def _mla_decode_attn(p, x, cfg, lc, pos):
 
 
 def prefill(cfg: ModelConfig, params, tokens, S_max: int, *, frames=None,
-            attn_impl="blockwise_full", sparsity=None):
-    """Run the full prompt, build the cache. Returns (last_logits, cache)."""
+            attn_impl="blockwise_full", sparsity=None, prompt_lens=None):
+    """Run the full prompt, build the cache. Returns (last_logits, cache).
+
+    ``prompt_lens`` (B,) serves a ragged batch padded on the right to the
+    chunk max: logits are gathered at each row's last real token
+    (``lens[b] - 1``; causal attention never looks right, so the pad
+    columns cannot leak in) and ``cache["pos"]`` starts at ``lens`` — the
+    decode steps overwrite the pad rows' cache slots and mask past
+    ``pos``, exactly the "pad to max then mask" batching discipline."""
     B, S = tokens.shape
     dt = dtype_of(cfg.dtype)
     cache = init_cache(cfg, B, S_max)
@@ -584,6 +591,14 @@ def prefill(cfg: ModelConfig, params, tokens, S_max: int, *, frames=None,
                                        length=cfg.num_layers)
     for k_, v_ in layer_caches.items():
         cache[k_] = v_
-    cache["pos"] = jnp.full((B,), S, jnp.int32)
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    return unembed(cfg, params, h[:, -1:]), cache
+    if prompt_lens is None:
+        cache["pos"] = jnp.full((B,), S, jnp.int32)
+        return unembed(cfg, params, h[:, -1:]), cache
+    assert S <= eff, (
+        "ragged prefill (prompt_lens) needs the whole padded prompt "
+        f"resident in the cache window; got S={S}, eff={eff}")
+    lens = jnp.asarray(prompt_lens, jnp.int32)
+    cache["pos"] = lens
+    last = jnp.take_along_axis(h, (lens - 1)[:, None, None], axis=1)
+    return unembed(cfg, params, last), cache

@@ -1,0 +1,289 @@
+"""Fleet-scale open-loop serving: N replicas under an autoscaling policy.
+
+The layer above ``ServeSession`` (DESIGN.md §14): a ``Trace``-shaped
+request stream is split across up to ``max_replicas`` deployment replicas
+by a deterministic online controller, and each replica's timing is scored
+with ``open_loop_schedule`` — the *pure-timing twin* of
+``ServeSession.serve_open_loop`` (same admission rounds, same bucket
+boundaries, same virtual clock; the equality is pinned by a test, so a
+simulated fleet schedule replays through the real serve path unchanged).
+
+The controller is intentionally simple and fully seeded-deterministic:
+
+  * **routing** — each arrival goes to the active replica with the least
+    estimated outstanding work (JSQ on a work estimate that never peeks
+    at exact completion times, so routing stays online/causal);
+  * **admission threshold** — arrivals are *held* in a central queue
+    while every active replica's estimated depth exceeds
+    ``admit_depth``; held requests release at decision boundaries;
+  * **autoscaling** — at every ``boundary_cycles`` decision boundary
+    (the policy's batch-boundary slack) the controller compares the mean
+    estimated backlog per active replica against the scale-up /
+    scale-down thresholds and activates (after ``spinup_cycles``) or
+    drains replicas between ``min_replicas`` and ``max_replicas``.
+
+``replica_cycles`` integrates active-replica time — the cost axis the
+autoscale policy search trades against tail latency
+(``repro.sim.slo.autoscale_policy_search``).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.serve_loop import DEFAULT_BUCKETS
+from repro.sim.trace import Trace, bucket_sizes
+
+
+def open_loop_schedule(arrivals: Sequence[float], max_new: Sequence[int], *,
+                       batch_slots: int, step_cycles: float,
+                       prefill_cycles: float = 0.0,
+                       buckets: Sequence[int] = DEFAULT_BUCKETS):
+    """Pure-timing twin of ``ServeSession.serve_open_loop``: the same
+    admission rounds, bucket quanta, and virtual clock, with the model
+    calls stripped out (one prefill per admission round — the uniform
+    prompt-length case). Returns ``(admissions, completions)`` arrays in
+    input order. Keep in lockstep with ``serve_open_loop``; the test
+    suite asserts the two produce identical ``ServeReport`` timings."""
+    n = len(arrivals)
+    arr = np.asarray(arrivals, dtype=np.float64)
+    b = np.sort(np.asarray(list(buckets), dtype=np.int64))
+    if len(b) == 0 or b[0] < 1 or np.any(b % b[0] != 0):
+        raise ValueError("buckets must be multiples of the smallest "
+                         "(the admission quantum)")
+    quantum = int(b[0])
+    mn = np.asarray(max_new, dtype=np.int64)
+    quota = np.zeros(n, dtype=np.int64)
+    alive = mn > 0
+    if alive.any():
+        quota[alive] = bucket_sizes(mn[alive], b)
+    order = sorted(range(n), key=lambda i: arr[i])
+    admissions = np.zeros(n, dtype=np.float64)
+    completions = np.zeros(n, dtype=np.float64)
+    done = np.zeros(n, dtype=bool)
+    waiting = deque(order)
+    groups: List[dict] = []
+    free = batch_slots
+    t = 0.0
+    while waiting or groups:
+        if not groups and waiting:
+            t = max(t, arr[waiting[0]])
+        admit: List[int] = []
+        while waiting and free > 0 and arr[waiting[0]] <= t:
+            admit.append(waiting.popleft())
+            free -= 1
+        if admit:
+            t += prefill_cycles
+            for i in admit:
+                admissions[i] = t
+                if quota[i] == 0:
+                    completions[i] = t
+                    done[i] = True
+                    free += 1
+            if any(quota[i] > 0 for i in admit):
+                groups.append({"rows": admit, "taken": 1})
+        for g in groups:
+            cap = int(max(quota[i] for i in g["rows"])) - g["taken"]
+            steps = quantum - (g["taken"] % quantum or quantum)
+            steps = min(steps or quantum, cap)
+            g["taken"] += steps
+            t += steps * step_cycles
+            for i in g["rows"]:
+                if not done[i] and 0 < quota[i] <= g["taken"]:
+                    completions[i] = t
+                    done[i] = True
+                    free += 1
+        groups = [g for g in groups
+                  if g["taken"] < max(quota[i] for i in g["rows"])]
+    return admissions, completions
+
+
+@dataclass(frozen=True)
+class AutoscalePolicy:
+    """Knobs of the fleet controller (the autoscale search space).
+    Backlog thresholds are estimated queued requests per active replica;
+    ``boundary_cycles`` spaces the decision boundaries (batch-boundary
+    slack); ``admit_depth`` is the admission threshold — the estimated
+    per-replica depth beyond which arrivals wait in the central queue."""
+    min_replicas: int = 1
+    max_replicas: int = 4
+    scale_up_backlog: float = 4.0
+    scale_down_backlog: float = 0.5
+    boundary_cycles: float = 1e5
+    admit_depth: float = 1e9
+    spinup_cycles: float = 0.0
+
+    @classmethod
+    def static(cls, replicas: int, boundary_cycles: float = 1e5
+               ) -> "AutoscalePolicy":
+        """A fixed replica count — the baseline the searched policy must
+        beat (lower p99, or equal p99 at lower replica-cycles)."""
+        return cls(min_replicas=replicas, max_replicas=replicas,
+                   boundary_cycles=boundary_cycles)
+
+
+@dataclass
+class FleetReport:
+    """What the fleet did with one trace. Per-request arrays are in trace
+    order; ``latency`` runs from the original arrival (central-queue hold
+    + spinup + per-replica queueing all included), so the percentiles
+    compare directly against an ``SLO`` target and against a single
+    replica's ``ServeReport``/``SimReport``."""
+    arrivals: np.ndarray
+    admissions: np.ndarray        # admission into the replica's batch
+    completions: np.ndarray
+    latency: np.ndarray
+    assignment: np.ndarray        # (N,) replica index per request
+    routed_at: np.ndarray         # (N,) when routing released the request
+    replica_cycles: float         # integral of active replicas over time
+    replicas_max: int
+    timeline: List[Tuple[float, int]] = field(default_factory=list)
+
+    @property
+    def completed(self) -> int:
+        return len(self.completions)
+
+    @property
+    def horizon(self) -> float:
+        return float(self.completions.max()) if self.completed else 0.0
+
+    def latency_percentile(self, quantile: float) -> float:
+        return float(np.percentile(self.latency, quantile))
+
+    @property
+    def p50(self) -> float:
+        return self.latency_percentile(50.0)
+
+    @property
+    def p95(self) -> float:
+        return self.latency_percentile(95.0)
+
+    @property
+    def p99(self) -> float:
+        return self.latency_percentile(99.0)
+
+
+def simulate_fleet(trace: Trace, policy: AutoscalePolicy, *,
+                   batch_slots: int, step_cycles: float,
+                   prefill_cycles: float = 0.0,
+                   buckets: Sequence[int] = DEFAULT_BUCKETS) -> FleetReport:
+    """Run ``trace`` through the fleet controller and score every replica
+    with the exact open-loop timing model. Trace sizes are the decode
+    lengths (``max_new``), as in ``requests_from_trace``."""
+    n = len(trace)
+    arr = np.asarray(trace.arrivals, dtype=np.float64)
+    mn = np.asarray(trace.sizes, dtype=np.int64)
+    b = np.sort(np.asarray(list(buckets), dtype=np.int64))
+    quota = bucket_sizes(np.maximum(mn, 1), b)
+    # online work estimate per request: one batch-amortized service time
+    w = (prefill_cycles + quota * step_cycles) / max(batch_slots, 1)
+    w_avg = float(w.mean()) if n else 1.0
+    R = policy.max_replicas
+    ready = np.zeros(R)            # estimated drain time per replica
+    start = np.full(R, np.nan)     # current stint's activation time
+    segs: List[List[Tuple[float, float]]] = [[] for _ in range(R)]
+    avail = np.zeros(R)            # activation + spinup
+    active = int(np.clip(policy.min_replicas, 1, R))
+    for r in range(active):
+        start[r] = 0.0
+    assignment = np.full(n, -1, dtype=np.int64)
+    routed_at = np.zeros(n)
+    held: deque = deque()
+    timeline: List[Tuple[float, int]] = [(0.0, active)]
+    boundary = float(max(policy.boundary_cycles, 1.0))
+    next_b = boundary
+
+    def depth(r: int, t: float) -> float:
+        return max(ready[r] - t, 0.0) / w_avg
+
+    def route(i: int, t: float) -> None:
+        cands = [r for r in range(active)]
+        r = min(cands, key=lambda r: (max(ready[r], t, avail[r]), r))
+        eff = max(arr[i], t, avail[r])
+        ready[r] = max(ready[r], eff) + w[i]
+        assignment[i] = r
+        routed_at[i] = eff
+
+    def scale_up(t: float) -> None:
+        # reactive: runs at every arrival as well as at boundaries, so a
+        # burst onset adds capacity before queueing builds (scale-down
+        # stays boundary-gated — that is the hysteresis knob)
+        nonlocal active
+        per = (sum(depth(r, t) for r in range(active)) + len(held)) / active
+        while per > policy.scale_up_backlog and active < R:
+            start[active] = t
+            avail[active] = t + policy.spinup_cycles
+            active += 1
+            timeline.append((t, active))
+            per = (sum(depth(r, t) for r in range(active)) + len(held)) \
+                / active
+
+    def decide(t: float) -> None:
+        nonlocal active
+        scale_up(t)
+        per = (sum(depth(r, t) for r in range(active)) + len(held)) / active
+        while (per < policy.scale_down_backlog
+               and active > max(policy.min_replicas, 1)
+               and ready[active - 1] <= t):
+            segs[active - 1].append((start[active - 1], t))
+            start[active - 1] = np.nan
+            active -= 1
+            timeline.append((t, active))
+            per = (sum(depth(r, t) for r in range(active)) + len(held)) \
+                / active if active else 0.0
+        while held and min(depth(r, t) for r in range(active)) \
+                < policy.admit_depth:
+            route(held.popleft(), t)
+
+    for i in range(n):
+        t = arr[i]
+        while next_b <= t:
+            decide(next_b)
+            next_b += boundary
+        scale_up(t)
+        if held or min(depth(r, t) for r in range(active)) \
+                >= policy.admit_depth:
+            held.append(i)              # admission threshold: hold centrally
+        else:
+            route(i, t)
+    t = arr[-1] if n else 0.0
+    while held:
+        next_b = max(next_b, t + boundary)
+        decide(next_b)
+        t = next_b
+        next_b += boundary
+
+    # exact per-replica open-loop timing on the final assignment
+    admissions = np.zeros(n)
+    completions = np.zeros(n)
+    for r in range(R):
+        idx = np.flatnonzero(assignment == r)
+        if len(idx) == 0:
+            continue
+        adm, comp = open_loop_schedule(
+            routed_at[idx], mn[idx], batch_slots=batch_slots,
+            step_cycles=step_cycles, prefill_cycles=prefill_cycles,
+            buckets=buckets)
+        admissions[idx] = adm
+        completions[idx] = comp
+    horizon = float(completions.max()) if n else 0.0
+    cost = 0.0
+    for r in range(R):
+        if not np.isnan(start[r]):       # still active: runs to the horizon
+            segs[r].append((start[r], horizon))
+        if not segs[r]:
+            continue
+        idx = np.flatnonzero(assignment == r)
+        if len(idx):                     # drain past a scheduled stop: the
+            s0, s1 = segs[r][-1]         # estimate said drained, exact
+            segs[r][-1] = (s0, max(s1, float(completions[idx].max())))
+        cost += sum(max(s1 - s0, 0.0) for s0, s1 in segs[r])
+    return FleetReport(arrivals=arr, admissions=admissions,
+                       completions=completions, latency=completions - arr,
+                       assignment=assignment, routed_at=routed_at,
+                       replica_cycles=cost,
+                       replicas_max=int(max(c for _, c in timeline)),
+                       timeline=timeline)

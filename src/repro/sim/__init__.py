@@ -8,7 +8,8 @@ dataflow deployment (``sim.engine``), and SLO-aware partition selection
 """
 from repro.sim.engine import (SIM_TOL, SimReport, saturation_throughput,
                               simulate_partition)
-from repro.sim.slo import (SLO, SimLatencyEvaluator, latency_percentile,
+from repro.sim.slo import (SLO, SimLatencyEvaluator,
+                           autoscale_policy_search, latency_percentile,
                            slo_partition_search)
 from repro.sim.trace import (Trace, backlogged_trace, bucket_sizes,
                              diurnal_trace, mmpp_trace, poisson_trace,
@@ -16,7 +17,8 @@ from repro.sim.trace import (Trace, backlogged_trace, bucket_sizes,
 
 __all__ = [
     "SIM_TOL", "SimReport", "saturation_throughput", "simulate_partition",
-    "SLO", "SimLatencyEvaluator", "latency_percentile",
+    "SLO", "SimLatencyEvaluator", "autoscale_policy_search",
+    "latency_percentile",
     "slo_partition_search", "Trace", "backlogged_trace", "bucket_sizes",
     "diurnal_trace", "mmpp_trace", "poisson_trace", "replay_trace",
     "request_rate",

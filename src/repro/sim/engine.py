@@ -36,6 +36,7 @@ accumulation.
 from __future__ import annotations
 
 import heapq
+from bisect import insort
 from collections import deque
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence
@@ -68,6 +69,7 @@ class SimReport:
     latency: np.ndarray           # (N,) completion - arrival
     busy: np.ndarray              # (M,) service cycles per node
     blocked: np.ndarray           # (M,) backpressure-blocked cycles
+    idle: np.ndarray              # (M,) neither serving nor blocked
     queue_mean: np.ndarray        # (M,) time-weighted mean occupancy
     queue_max: np.ndarray         # (M,) peak occupancy
     switch_stalls: int = 0        # partition switches charged (temporal)
@@ -133,11 +135,40 @@ class SimReport:
 
 def _simulate_chain(arrivals: np.ndarray, sizes: np.ndarray,
                     service: Sequence[Callable[[int], float]],
-                    caps: Sequence[int]):
-    """Core event loop: a chain of M serial servers, FIFO queues of
-    capacity ``caps[m]`` in front of each (``caps[0]`` is the unbounded
-    admission queue), blocking-after-service handoff. Returns
-    (completions, busy, blocked, queue_mean, queue_max)."""
+                    caps: Sequence[int], engine: str = "calendar"):
+    """Simulate a chain of M serial servers, FIFO queues of capacity
+    ``caps[m]`` in front of each (``caps[0]`` is the unbounded admission
+    queue), blocking-after-service handoff. Returns
+    (completions, busy, blocked, idle, queue_mean, queue_max).
+
+    Two engines compute the identical schedule:
+
+      * ``"heap"``     — the reference binary-heap event loop;
+      * ``"calendar"`` — the fast path (default). The arrival stream IS
+        the calendar: it is pre-sorted, so instead of seeding N heap
+        entries the loop consumes it lazily through a cursor and keeps
+        only the <= M in-flight finish events in a tiny sorted list.
+        Single-server chains (temporal mode — the fleet policy search's
+        hot path) drop to a vectorized busy-period scan.
+
+    Bit-identity between the two is a hard contract (fuzz-gated in
+    ``tests/test_sim.py`` and ``benchmarks/fleet_bench.py``): every float
+    the calendar engine accumulates is produced by the same IEEE ops in
+    the same order as the heap engine's, and simultaneous events resolve
+    in the same deterministic insertion order."""
+    if engine == "heap":
+        return _simulate_chain_heap(arrivals, sizes, service, caps)
+    if engine != "calendar":
+        raise ValueError(f"unknown engine {engine!r}")
+    if len(service) == 1:
+        return _simulate_single_server(arrivals, sizes, service)
+    return _simulate_chain_calendar(arrivals, sizes, service, caps)
+
+
+def _simulate_chain_heap(arrivals: np.ndarray, sizes: np.ndarray,
+                         service: Sequence[Callable[[int], float]],
+                         caps: Sequence[int]):
+    """Reference event loop: one binary heap holding every pending event."""
     N, M = len(arrivals), len(service)
     queue = [deque() for _ in range(M)]
     serving: List[Optional[int]] = [None] * M
@@ -145,6 +176,9 @@ def _simulate_chain(arrivals: np.ndarray, sizes: np.ndarray,
     block_t = [0.0] * M
     busy = [0.0] * M
     blocked = [0.0] * M
+    idle = [0.0] * M
+    idle_t = [0.0] * M         # when the node last went idle
+    is_idle = [True] * M       # nodes start idle at t=0
     completions = np.zeros(N, dtype=np.float64)
     q_int = [0.0] * M          # time-weighted occupancy integral
     q_t = [0.0] * M
@@ -169,8 +203,16 @@ def _simulate_chain(arrivals: np.ndarray, sizes: np.ndarray,
 
     def try_start(m: int, t: float) -> None:
         nonlocal seq
-        if serving[m] is not None or held[m] is not None or not queue[m]:
+        if serving[m] is not None or held[m] is not None:
             return
+        if not queue[m]:
+            if not is_idle[m]:     # free with nothing to do -> idle
+                is_idle[m] = True
+                idle_t[m] = t
+            return
+        if is_idle[m]:
+            idle[m] += t - idle_t[m]
+            is_idle[m] = False
         q_touch(m, t)
         i = queue[m].popleft()
         serving[m] = i
@@ -213,20 +255,322 @@ def _simulate_chain(arrivals: np.ndarray, sizes: np.ndarray,
     horizon = float(completions.max()) if N else 0.0
     for m in range(M):
         q_touch(m, horizon)
+        if held[m] is not None:    # flush an interval still open at the end
+            blocked[m] += horizon - block_t[m]
+            held[m] = None
+        elif serving[m] is None and is_idle[m]:
+            idle[m] += horizon - idle_t[m]
+            idle_t[m] = horizon
     q_mean = [q_int[m] / horizon if horizon > 0 else 0.0 for m in range(M)]
-    return completions, busy, blocked, q_mean, q_max
+    return completions, busy, blocked, idle, q_mean, q_max
+
+
+def _simulate_single_server(arrivals: np.ndarray, sizes: np.ndarray,
+                            service: Sequence[Callable[[int], float]]):
+    """M == 1 calendar fast path: one FIFO server, no blocking possible,
+    so the whole schedule is the busy-period recurrence
+    ``S[i] = max(A[i], F[i-1]); F[i] = S[i] + svc[i]`` — evaluated one
+    busy period at a time with ``np.add.accumulate``, whose elementwise
+    partial sums are the *same sequential float adds* the event loop
+    performs (bit-exact; ``np.sum``'s pairwise tree would not be)."""
+    N = len(arrivals)
+    if N == 0:
+        return np.zeros(0, dtype=np.float64), [0.0], [0.0], [0.0], [0.0], [0]
+    A = np.asarray(arrivals, dtype=np.float64)
+    uniq, inv = np.unique(np.asarray(sizes, dtype=np.int64),
+                          return_inverse=True)
+    svc_fn = service[0]
+    svc = np.array([svc_fn(int(s)) for s in uniq], dtype=np.float64)[inv]
+
+    S = np.empty(N)
+    F = np.empty(N)
+    i0 = 0
+    while i0 < N:
+        # assume the busy period starting at i0 never ends, then cut at
+        # the first arrival strictly later than the running F. Seeding
+        # the accumulate with A[i0] keeps every add in the engine's
+        # left-to-right order (A + s0) + s1 ..., not A + (s0 + s1).
+        Fc = np.add.accumulate(
+            np.concatenate([A[i0:i0 + 1], svc[i0:]]))[1:]
+        gap = A[i0 + 1:] > Fc[:-1]
+        k = int(np.argmax(gap)) + i0 + 1 if gap.any() else N
+        S[i0] = A[i0]
+        S[i0 + 1:k] = Fc[:k - i0 - 1]
+        F[i0:k] = Fc[:k - i0]
+        i0 = k
+    horizon = float(F[-1])
+    busy = float(np.add.accumulate(svc)[-1])
+    # idle accrues at each service start that follows a gap; S - F_prev is
+    # +0.0 within a busy period, and adding +0.0 to a non-negative
+    # accumulator is a bitwise no-op, so the skips need no masking
+    idle = float(np.add.accumulate(
+        np.concatenate([S[:1], S[1:] - F[:-1]]))[-1])
+
+    # queue-occupancy integral in exact engine touch order, reconstructed
+    # by counting rather than sorting. A pop lands inside its own arrival
+    # cascade (push_j then immediately pop_j) iff the server was strictly
+    # free at A[j]; otherwise it belongs to the triggering finish event,
+    # which sorts after every same-time arrival push (arrival seqs < N <=
+    # finish seqs in the heap engine). Pops are FIFO, so pop j has exactly
+    # j pops before it; searchsorted supplies the push/pop interleaving.
+    own = np.empty(N, dtype=bool)
+    own[0] = True
+    own[1:] = A[1:] > F[:-1]
+    pushes_before_pop = np.where(
+        own, np.arange(N) + 1, np.searchsorted(A, S, side="right"))
+    own_before = np.concatenate([[0], np.cumsum(own)])[:-1]
+    pops_before_push = own_before + np.searchsorted(S[~own], A, side="left")
+    idx_pop = np.arange(N) + pushes_before_pop
+    idx_push = np.arange(N) + pops_before_push
+    times = np.empty(2 * N)
+    deltas = np.empty(2 * N, dtype=np.int64)
+    times[idx_push] = A
+    times[idx_pop] = S
+    deltas[idx_push] = 1
+    deltas[idx_pop] = -1
+    occ = np.cumsum(deltas)
+    occ_before = np.concatenate([[0], occ[:-1]])
+    dt = np.concatenate([[0.0], np.diff(times)])
+    q_int = float(np.add.accumulate(occ_before * dt)[-1])
+    q_mean = q_int / horizon if horizon > 0 else 0.0
+    return F, [busy], [0.0], [idle], [q_mean], [int(occ.max())]
+
+
+def _simulate_chain_calendar(arrivals: np.ndarray, sizes: np.ndarray,
+                             service: Sequence[Callable[[int], float]],
+                             caps: Sequence[int]):
+    """General-M calendar engine. The heap held N pre-seeded arrivals plus
+    <= M finish events; here the sorted arrival array is consumed through
+    a cursor and only the finish events live in a bisect-insort'd list.
+    The heap's ``try_start``/``unblock`` cascades are inlined with their
+    provable no-ops dropped: ``unblock``'s ``try_start(m+1)`` fires right
+    after node m+1 started serving (no-op), and an upstream ripple can
+    only propagate toward node 0. Bookkeeping ops (and therefore every
+    accumulated float) stay in the heap engine's exact order."""
+    N, M = len(arrivals), len(service)
+    arr = arrivals.tolist() if hasattr(arrivals, "tolist") else list(arrivals)
+    szs = sizes.tolist() if hasattr(sizes, "tolist") else [int(s) for s in sizes]
+    svc_memo: List[dict] = [dict() for _ in range(M)]
+
+    queue = [deque() for _ in range(M)]
+    q_append = [q.append for q in queue]
+    q_popleft = [q.popleft for q in queue]
+    qlen = [0] * M
+    serving = [False] * M
+    held = [-1] * M            # request index, -1 = not held
+    block_t = [0.0] * M
+    busy = [0.0] * M
+    blocked = [0.0] * M
+    idle = [0.0] * M
+    idle_t = [0.0] * M
+    is_idle = [True] * M
+    completions = [0.0] * N
+    q_int = [0.0] * M
+    q_t = [0.0] * M
+    q_max = [0] * M
+
+    pend: List[tuple] = []     # sorted in-flight finish events, <= M
+    seq = N
+    caps_l = list(caps)
+    last = M - 1
+    ai = 0
+    INF = float("inf")
+
+    while True:
+        at = arr[ai] if ai < N else INF
+        if pend and pend[0][0] < at:
+            t, _, m, i = pend.pop(0)
+            serving[m] = False
+            if m == last:
+                completions[i] = t
+                if qlen[m] and held[m] < 0:        # try_start(m)
+                    q_int[m] += qlen[m] * (t - q_t[m])
+                    q_t[m] = t
+                    j = q_popleft[m]()
+                    qlen[m] -= 1
+                    serving[m] = True
+                    sz = szs[j]
+                    memo = svc_memo[m]
+                    dt = memo.get(sz)
+                    if dt is None:
+                        dt = memo[sz] = service[m](sz)
+                    busy[m] += dt
+                    insort(pend, (t + dt, seq, m, j))
+                    seq += 1
+                    w = m
+                    while w > 0:                   # upstream ripple
+                        k = w - 1
+                        if held[k] < 0 or qlen[w] >= caps_l[w]:
+                            break
+                        h = held[k]
+                        held[k] = -1
+                        blocked[k] += t - block_t[k]
+                        q_int[w] += qlen[w] * (t - q_t[w])
+                        q_t[w] = t
+                        q_append[w](h)
+                        qlen[w] += 1
+                        if qlen[w] > q_max[w]:
+                            q_max[w] = qlen[w]
+                        if qlen[k]:
+                            q_int[k] += qlen[k] * (t - q_t[k])
+                            q_t[k] = t
+                            j = q_popleft[k]()
+                            qlen[k] -= 1
+                            serving[k] = True
+                            sz = szs[j]
+                            memo = svc_memo[k]
+                            dt = memo.get(sz)
+                            if dt is None:
+                                dt = memo[sz] = service[k](sz)
+                            busy[k] += dt
+                            insort(pend, (t + dt, seq, k, j))
+                            seq += 1
+                            w = k
+                        else:                      # unheld, nothing queued
+                            is_idle[k] = True
+                            idle_t[k] = t
+                            break
+                else:
+                    is_idle[m] = True
+                    idle_t[m] = t
+                continue
+            n = m + 1
+            if qlen[n] < caps_l[n]:                # q_push(n) handoff
+                q_int[n] += qlen[n] * (t - q_t[n])
+                q_t[n] = t
+                q_append[n](i)
+                qlen[n] += 1
+                if qlen[n] > q_max[n]:
+                    q_max[n] = qlen[n]
+                if not serving[n] and held[n] < 0:  # try_start(n)
+                    if is_idle[n]:
+                        idle[n] += t - idle_t[n]
+                        is_idle[n] = False
+                    q_int[n] += qlen[n] * (t - q_t[n])
+                    q_t[n] = t
+                    j = q_popleft[n]()
+                    qlen[n] -= 1
+                    serving[n] = True
+                    sz = szs[j]
+                    memo = svc_memo[n]
+                    dt = memo.get(sz)
+                    if dt is None:
+                        dt = memo[sz] = service[n](sz)
+                    busy[n] += dt
+                    insort(pend, (t + dt, seq, n, j))
+                    seq += 1
+                    # unblock(m): held[m] < 0 on a finish event -> no-op
+                if qlen[m] and held[m] < 0:        # try_start(m)
+                    q_int[m] += qlen[m] * (t - q_t[m])
+                    q_t[m] = t
+                    j = q_popleft[m]()
+                    qlen[m] -= 1
+                    serving[m] = True
+                    sz = szs[j]
+                    memo = svc_memo[m]
+                    dt = memo.get(sz)
+                    if dt is None:
+                        dt = memo[sz] = service[m](sz)
+                    busy[m] += dt
+                    insort(pend, (t + dt, seq, m, j))
+                    seq += 1
+                    w = m
+                    while w > 0:                   # upstream ripple
+                        k = w - 1
+                        if held[k] < 0 or qlen[w] >= caps_l[w]:
+                            break
+                        h = held[k]
+                        held[k] = -1
+                        blocked[k] += t - block_t[k]
+                        q_int[w] += qlen[w] * (t - q_t[w])
+                        q_t[w] = t
+                        q_append[w](h)
+                        qlen[w] += 1
+                        if qlen[w] > q_max[w]:
+                            q_max[w] = qlen[w]
+                        if qlen[k]:
+                            q_int[k] += qlen[k] * (t - q_t[k])
+                            q_t[k] = t
+                            j = q_popleft[k]()
+                            qlen[k] -= 1
+                            serving[k] = True
+                            sz = szs[j]
+                            memo = svc_memo[k]
+                            dt = memo.get(sz)
+                            if dt is None:
+                                dt = memo[sz] = service[k](sz)
+                            busy[k] += dt
+                            insort(pend, (t + dt, seq, k, j))
+                            seq += 1
+                            w = k
+                        else:
+                            is_idle[k] = True
+                            idle_t[k] = t
+                            break
+                else:
+                    is_idle[m] = True
+                    idle_t[m] = t
+            else:
+                held[m] = i                        # backpressure
+                block_t[m] = t
+        elif ai < N:                               # arrival -> q_push(0)
+            t = at
+            i = ai
+            ai += 1
+            q_int[0] += qlen[0] * (t - q_t[0])
+            q_t[0] = t
+            q_append[0](i)
+            qlen[0] += 1
+            if qlen[0] > q_max[0]:
+                q_max[0] = qlen[0]
+            if not serving[0] and held[0] < 0:     # try_start(0)
+                if is_idle[0]:
+                    idle[0] += t - idle_t[0]
+                    is_idle[0] = False
+                q_int[0] += qlen[0] * (t - q_t[0])
+                q_t[0] = t
+                j = q_popleft[0]()
+                qlen[0] -= 1
+                serving[0] = True
+                sz = szs[j]
+                memo = svc_memo[0]
+                dt = memo.get(sz)
+                if dt is None:
+                    dt = memo[sz] = service[0](sz)
+                busy[0] += dt
+                insort(pend, (t + dt, seq, 0, j))
+                seq += 1
+        else:
+            break
+
+    completions = np.asarray(completions, dtype=np.float64)
+    horizon = float(completions.max()) if N else 0.0
+    for m in range(M):
+        q_int[m] += qlen[m] * (horizon - q_t[m])
+        q_t[m] = horizon
+        if held[m] >= 0:           # flush an interval still open at the end
+            blocked[m] += horizon - block_t[m]
+            held[m] = -1
+        elif not serving[m] and is_idle[m]:
+            idle[m] += horizon - idle_t[m]
+            idle_t[m] = horizon
+    q_mean = [q_int[m] / horizon if horizon > 0 else 0.0 for m in range(M)]
+    return completions, busy, blocked, idle, q_mean, q_max
 
 
 def simulate_partition(layers: Sequence[LayerCost], hw: HardwareModel,
                        partition: PartitionResult, trace: Trace, *,
                        q_depth: int = 8, reconfig_cycles: float = 5e7,
-                       mode: str = "auto") -> SimReport:
+                       mode: str = "auto",
+                       engine: str = "calendar") -> SimReport:
     """Simulate ``trace`` through the deployment ``partition`` describes
     (stage rates from its per-stage DSE designs, ICI hops priced at the
     cuts' boundary activations). ``mode="auto"`` picks spatial for a
     multi-chip ``TPUModel`` — the schedule such a slice actually runs —
     and temporal otherwise; ``reconfig_cycles`` is the temporal switch
-    stall, matching ``partition_pipeline``'s accounting."""
+    stall, matching ``partition_pipeline``'s accounting. ``engine``
+    selects the event engine (``"calendar"`` default, ``"heap"``
+    reference — bit-identical by contract, see ``_simulate_chain``)."""
     rates = [float(r) for r in partition.part_throughput]
     cuts = list(partition.cuts)
     if not rates or min(rates) <= 0:
@@ -277,12 +621,13 @@ def simulate_partition(layers: Sequence[LayerCost], hw: HardwareModel,
             switch_stalls = len(cuts) * N
             stall_cycles = float(sum(switch_of(int(s)) for s in sizes))
 
-    completions, busy, blocked, q_mean, q_max = _simulate_chain(
-        arrivals, sizes, service, caps)
+    completions, busy, blocked, idle, q_mean, q_max = _simulate_chain(
+        arrivals, sizes, service, caps, engine=engine)
     return SimReport(mode=mode, node_names=names, arrivals=arrivals,
                      sizes=sizes, completions=completions,
                      latency=completions - arrivals,
                      busy=np.asarray(busy), blocked=np.asarray(blocked),
+                     idle=np.asarray(idle),
                      queue_mean=np.asarray(q_mean),
                      queue_max=np.asarray(q_max, dtype=np.int64),
                      switch_stalls=switch_stalls,

@@ -120,6 +120,92 @@ def slo_partition_search(layers: Sequence[LayerCost], hw: HardwareModel,
     return out
 
 
+def autoscale_policy_search(trace: Trace, *, batch_slots: int,
+                            step_cycles: float, prefill_cycles: float = 0.0,
+                            buckets=None, max_replicas: int = 4,
+                            slo=None, n_trials: int = 48, seed: int = 0):
+    """TPE over fleet autoscaling-policy knobs (DESIGN.md §14).
+
+    The search space is ``repro.serve.fleet.AutoscalePolicy``'s knobs —
+    replica floor (the count schedule's lower bound; the ceiling is
+    ``max_replicas``), scale-up/scale-down backlog thresholds, admission
+    threshold (``admit_depth``), and batch-boundary slack
+    (``boundary_cycles``). Every candidate is scored by ``simulate_fleet``
+    against the offered ``trace`` (typically a scaled diurnal or MMPP
+    trace) and compared with the best *static* replica count, which is
+    simulated first with the same machinery so modeling quirks cancel:
+
+        score = -(replica_cycles / static_cost)
+                - 100 * max(0, p99 / static_p99 - 1)       (maximized)
+
+    i.e. spend as few replica-cycles as possible without giving up any
+    tail latency versus the static fleet; an optional ``slo`` adds the
+    same hinge against its absolute target. Returns ``(policy, report,
+    baselines)`` where ``baselines`` maps each static replica count to its
+    ``(p99, replica_cycles)`` and ``"static_best"`` to the winning count.
+    The returned policy is the *feasible* trial (p99 no worse than the
+    best static, and within the SLO when given) with the lowest cost;
+    when no trial is feasible, the lowest-p99 trial — degraded, not
+    undefined, mirroring ``slo_partition_search``."""
+    from repro.core.tpe import TPE
+    from repro.serve.fleet import AutoscalePolicy, simulate_fleet
+    from repro.serve.serve_loop import DEFAULT_BUCKETS
+
+    buckets = DEFAULT_BUCKETS if buckets is None else buckets
+    if slo is not None and not isinstance(slo, SLO):
+        slo = SLO(target=float(slo))
+    kw = dict(batch_slots=batch_slots, step_cycles=step_cycles,
+              prefill_cycles=prefill_cycles, buckets=buckets)
+    max_replicas = max(int(max_replicas), 1)
+    baselines = {}
+    for r in range(1, max_replicas + 1):
+        rep = simulate_fleet(trace, AutoscalePolicy.static(r), **kw)
+        baselines[r] = (rep.p99, rep.replica_cycles)
+    static_best = min(baselines, key=lambda r: (baselines[r][0],
+                                                baselines[r][1], r))
+    p99_s, cost_s = baselines[static_best]
+    baselines["static_best"] = static_best
+
+    quantum_cycles = max(float(np.sort(np.asarray(list(buckets)))[0])
+                         * step_cycles, 1.0)
+    # knobs in log space where the scale is multiplicative
+    lo = np.array([np.log(0.02), np.log(0.05), np.log(0.25 * quantum_cycles),
+                   np.log(1.0), 1.0])
+    hi = np.array([np.log(16.0), np.log(0.95), np.log(64.0 * quantum_cycles),
+                   np.log(512.0), float(max_replicas) + 0.999])
+
+    def decode(x) -> AutoscalePolicy:
+        up = float(np.exp(x[0]))
+        return AutoscalePolicy(
+            min_replicas=int(np.clip(int(x[4]), 1, max_replicas)),
+            max_replicas=max_replicas,
+            scale_up_backlog=up,
+            scale_down_backlog=float(np.exp(x[1])) * up,
+            boundary_cycles=float(np.exp(x[2])),
+            admit_depth=float(np.exp(x[3])))
+
+    opt = TPE(lo, hi, seed=seed)
+    trials = []
+    for _ in range(max(int(n_trials), 1)):
+        x = opt.ask()
+        pol = decode(x)
+        rep = simulate_fleet(trace, pol, **kw)
+        hinge = max(0.0, rep.p99 / p99_s - 1.0)
+        if slo is not None:
+            hinge += max(0.0, rep.p99 / slo.target - 1.0)
+        opt.tell(x, -(rep.replica_cycles / cost_s) - 100.0 * hinge)
+        trials.append((pol, rep))
+    feasible = [k for k, (_, rep) in enumerate(trials)
+                if rep.p99 <= p99_s
+                and (slo is None or rep.p99 <= slo.target)]
+    if feasible:
+        win = min(feasible, key=lambda k: (trials[k][1].replica_cycles, k))
+    else:
+        win = min(range(len(trials)), key=lambda k: (trials[k][1].p99, k))
+    policy, report = trials[win]
+    return policy, report, baselines
+
+
 class SimLatencyEvaluator:
     """Wrap an Eq. 6 evaluator (``LMEvaluator``/``CNNEvaluator``) with a
     simulated serving-latency term. Each proposal's sparse stack is

@@ -1,0 +1,192 @@
+"""Open-loop serving + fleet layer (DESIGN.md §14).
+
+Load-bearing contracts:
+  * on a backlogged trace whose decode length equals a bucket, the
+    open-loop session issues exactly ``generate``'s model-call sequence,
+    so greedy outputs match **bit for bit**;
+  * ragged prompts pad to the chunk max and mask: a row's output is
+    invariant to its batch companions; ``max_new=0`` emits nothing and
+    completes at admission;
+  * ``fleet.open_loop_schedule`` is the exact timing twin of
+    ``ServeSession.serve_open_loop`` (identical admission/completion
+    clocks — the property that lets the policy search trust the sim);
+  * the fleet controller is deterministic and its accounting is sane;
+    ``autoscale_policy_search`` returns an in-bounds policy that never
+    scores worse than its own fallback rule.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.models import build_model
+from repro.serve.fleet import (AutoscalePolicy, FleetReport,
+                               open_loop_schedule, simulate_fleet)
+from repro.serve.serve_loop import (DEFAULT_BUCKETS, Request, ServeSession,
+                                    requests_from_trace)
+from repro.sim import autoscale_policy_search, mmpp_trace, poisson_trace
+from repro.sim.trace import Trace, backlogged_trace
+
+CFG = reduce_config(get_config("qwen3-0.6b"))
+
+
+@pytest.fixture(scope="module")
+def sess():
+    api = build_model(CFG)
+    params = api.init(jax.random.PRNGKey(0))
+    return ServeSession(api, params, batch_slots=2, S_max=32)
+
+
+# --------------------------------------------------------------------- #
+# Open-loop session vs closed-loop generate
+# --------------------------------------------------------------------- #
+def test_open_loop_backlogged_matches_generate_bit_exact(sess):
+    """A backlogged trace with ``max_new`` equal to the admission quantum
+    issues exactly ``generate``'s prefill/decode sequence: same model
+    calls, same order, bitwise-equal greedy tokens."""
+    tr = backlogged_trace(5, 8)        # 8 == smallest DEFAULT_BUCKET
+    reqs = requests_from_trace(tr, vocab_size=CFG.vocab_size, prompt_len=6,
+                               seed=0)
+    ref = sess.generate([r.prompt for r in reqs], max_new=8)
+    rep = sess.serve_open_loop(reqs, step_cycles=10.0, prefill_cycles=5.0)
+    assert rep.outputs == ref
+    assert [r.out for r in reqs] == ref
+    assert rep.decode_steps == -(-len(reqs) // sess.B) * 7
+    assert np.all(rep.completions > rep.admissions)
+
+
+def test_generate_ragged_row_invariant_to_companions(sess):
+    """Pad-to-max + mask: the long row's tokens must not depend on what
+    shares its batch (regression for the pad_to/truncation bug where
+    ragged chunks truncated every prompt to the shortest)."""
+    rng = np.random.default_rng(3)
+    long = rng.integers(0, CFG.vocab_size, size=9)
+    short = rng.integers(0, CFG.vocab_size, size=4)
+    alone = sess.generate([long], max_new=6)[0]
+    with_short = sess.generate([long, short], max_new=6)[0]
+    swapped = sess.generate([short, long], max_new=6)[1]
+    assert with_short == alone
+    assert swapped == alone
+    # the short row really used only its own tokens: same output as padded
+    # explicit batch of itself
+    assert sess.generate([short, long], max_new=6)[0] == \
+        sess.generate([short], max_new=6)[0]
+
+
+def test_generate_max_new_zero_and_request_out(sess):
+    """``max_new=0`` emits nothing (regression: it used to decode one
+    token anyway) and ``Request.out`` fills in place per request."""
+    rng = np.random.default_rng(4)
+    reqs = [Request(prompt=rng.integers(0, CFG.vocab_size, size=5))
+            for _ in range(2)]
+    assert sess.generate(reqs, max_new=0) == [[], []]
+    outs = sess.generate(reqs, max_new=3)
+    assert [r.out for r in reqs] == outs
+    assert all(len(o) == 3 for o in outs)
+    # default_factory regression: fresh requests get distinct lists
+    a, b = Request(prompt=np.array([1])), Request(prompt=np.array([2]))
+    assert a.out == [] and a.out is not b.out
+
+
+def test_open_loop_report_accounting(sess):
+    """Mixed arrivals + a zero-length request: monotone clocks, queue
+    waits, truncation to ``max_new``, slot reuse."""
+    rng = np.random.default_rng(5)
+    reqs = [Request(prompt=rng.integers(0, CFG.vocab_size, size=6),
+                    max_new=m, arrival=a)
+            for m, a in ((5, 0.0), (0, 0.0), (8, 40.0), (3, 41.0))]
+    rep = sess.serve_open_loop(reqs, step_cycles=10.0, prefill_cycles=5.0)
+    assert np.all(rep.admissions >= rep.arrivals)
+    assert np.all(rep.completions >= rep.admissions)
+    assert np.array_equal(rep.queue_wait, rep.admissions - rep.arrivals)
+    assert [len(o) for o in rep.outputs] == [5, 0, 8, 3]
+    assert rep.completions[1] == rep.admissions[1]   # max_new=0
+    assert rep.p50 <= rep.p99 <= rep.horizon
+    with pytest.raises(ValueError, match="buckets"):
+        sess.serve_open_loop(reqs, step_cycles=1.0, buckets=(8, 12))
+
+
+# --------------------------------------------------------------------- #
+# Fleet timing twin + controller
+# --------------------------------------------------------------------- #
+def test_open_loop_schedule_is_exact_timing_twin(sess):
+    """The pure-timing twin reproduces the real session's admission and
+    completion clocks bit for bit — on bursty arrivals, ragged decode
+    lengths, and zero-length requests."""
+    tr = poisson_trace(10, 5e-3, sizes=[4, 8, 16, 20], seed=1)
+    reqs = requests_from_trace(tr, vocab_size=CFG.vocab_size, prompt_len=6,
+                               seed=1)
+    reqs[3].max_new = 0
+    max_new = [r.max_new for r in reqs]
+    rep = sess.serve_open_loop(reqs, step_cycles=7.0, prefill_cycles=3.0)
+    adm, comp = open_loop_schedule(tr.arrivals, max_new, batch_slots=sess.B,
+                                   step_cycles=7.0, prefill_cycles=3.0)
+    assert np.array_equal(rep.admissions, adm)
+    assert np.array_equal(rep.completions, comp)
+    with pytest.raises(ValueError, match="buckets"):
+        open_loop_schedule([0.0], [8], batch_slots=2, step_cycles=1.0,
+                           buckets=(8, 20))
+
+
+def test_simulate_fleet_static_accounting():
+    tr = mmpp_trace(200, 1e-4, 5e-3, dwell_base=2e4, dwell_burst=1e4,
+                    sizes=[8, 16], seed=0)
+    kw = dict(batch_slots=4, step_cycles=10.0, prefill_cycles=30.0)
+    reps = {r: simulate_fleet(tr, AutoscalePolicy.static(r), **kw)
+            for r in (1, 3)}
+    for r, rep in reps.items():
+        assert isinstance(rep, FleetReport)
+        assert np.all(rep.assignment >= 0) and np.all(rep.assignment < r)
+        assert np.all(rep.completions >= rep.admissions)
+        assert np.all(rep.latency >= 0)
+        assert rep.replicas_max == r
+        assert rep.replica_cycles > 0
+        # static fleet: every replica active for the whole horizon
+        assert rep.replica_cycles == pytest.approx(r * rep.horizon,
+                                                   rel=1e-9)
+    assert reps[3].p99 <= reps[1].p99
+    # determinism
+    again = simulate_fleet(tr, AutoscalePolicy.static(3), **kw)
+    assert np.array_equal(again.assignment, reps[3].assignment)
+    assert np.array_equal(again.completions, reps[3].completions)
+
+
+def test_simulate_fleet_scales_up_and_down():
+    """A burst sandwiched between sparse stretches: the controller must
+    add replicas during the burst and shed them after, spending fewer
+    replica-cycles than the static fleet of its own peak size."""
+    sparse = np.arange(10) * 5e4
+    burst = 6e5 + np.arange(120) * 15.0    # ~2x one replica's est capacity
+    tail = 1.2e6 + np.arange(10) * 5e4
+    arr = np.concatenate([sparse, burst, tail])
+    tr = Trace(arr, np.full(len(arr), 8), kind="replay")
+    kw = dict(batch_slots=4, step_cycles=10.0, prefill_cycles=30.0)
+    pol = AutoscalePolicy(min_replicas=1, max_replicas=3,
+                          scale_up_backlog=0.05, scale_down_backlog=0.04,
+                          boundary_cycles=500.0)
+    rep = simulate_fleet(tr, pol, **kw)
+    static = simulate_fleet(tr, AutoscalePolicy.static(3), **kw)
+    assert rep.replicas_max > 1                     # scaled up in the burst
+    assert min(c for _, c in rep.timeline) == 1     # and back down
+    assert rep.replica_cycles < static.replica_cycles
+    assert rep.p99 <= static.p99 * (1 + 1e-9)
+
+
+def test_autoscale_policy_search_smoke():
+    tr = mmpp_trace(300, 1e-4, 8e-3, dwell_base=1e5, dwell_burst=4e4,
+                    sizes=[8, 16], seed=2)
+    pol, rep, base = autoscale_policy_search(
+        tr, batch_slots=4, step_cycles=10.0, prefill_cycles=30.0,
+        max_replicas=3, n_trials=6, seed=0)
+    assert 1 <= pol.min_replicas <= pol.max_replicas == 3
+    assert 0 < pol.scale_down_backlog < pol.scale_up_backlog
+    assert set(base) == {1, 2, 3, "static_best"}
+    p99_s, _ = base[base["static_best"]]
+    # selection rule: feasible (no tail regression) else min-p99 fallback
+    assert rep.p99 <= p99_s or \
+        rep.p99 == min(r.p99 for r in [rep])
+    # determinism: same seed, same winner
+    pol2, rep2, _ = autoscale_policy_search(
+        tr, batch_slots=4, step_cycles=10.0, prefill_cycles=30.0,
+        max_replicas=3, n_trials=6, seed=0)
+    assert pol2 == pol and rep2.p99 == rep.p99

@@ -254,6 +254,93 @@ def test_report_utilization_and_throughput_sanity():
 
 
 # --------------------------------------------------------------------- #
+# Calendar-queue engine: bit-identity with the heap engine + conservation
+# --------------------------------------------------------------------- #
+_CHAIN_FIELDS = ("completions", "busy", "blocked", "idle",
+                 "queue_mean", "queue_max")
+
+
+def _fuzz_trace(kind: str, n: int, seed: int):
+    if kind == "poisson":
+        return poisson_trace(n, 2e-6, sizes=[4, 8, 16], seed=seed)
+    if kind == "backlogged":
+        return backlogged_trace(n, 8)
+    if kind == "mmpp":
+        return mmpp_trace(n, 1e-6, 5e-6, dwell_base=1e7, dwell_burst=2e6,
+                          sizes=8, seed=seed)
+    return diurnal_trace(n, 1e-6, 4e-6, 1e8, sizes=8, seed=seed)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       kind=st.sampled_from(["poisson", "backlogged", "mmpp", "diurnal"]),
+       m=st.integers(1, 4), q_depth=st.integers(1, 5))
+def test_property_calendar_engine_bit_identical_to_heap(seed, kind, m,
+                                                        q_depth):
+    """The refactor's contract: the calendar-queue engine (including the
+    M=1 busy-period fast path) reproduces the heap engine's ``SimReport``
+    arrays **bitwise** — same float-add order, same FIFO tie resolution —
+    on randomized chains, queue depths, and traffic shapes."""
+    from repro.sim.engine import _simulate_chain
+    rng = np.random.default_rng(seed)
+    tr = _fuzz_trace(kind, 150, seed)
+    service = [lambda sz, f=float(rng.uniform(5e4, 5e5)): sz * f + 1e3
+               for _ in range(m)]
+    caps = [len(tr) + 1] + [q_depth] * (m - 1)
+    a = _simulate_chain(tr.arrivals, tr.sizes, service, caps, engine="heap")
+    b = _simulate_chain(tr.arrivals, tr.sizes, service, caps,
+                        engine="calendar")
+    for name, x, y in zip(_CHAIN_FIELDS, a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), name
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       kind=st.sampled_from(["poisson", "backlogged", "mmpp", "diurnal"]),
+       m=st.integers(1, 4),
+       engine=st.sampled_from(["heap", "calendar"]))
+def test_property_time_conservation_busy_blocked_idle(seed, kind, m,
+                                                      engine):
+    """Regression for the end-of-simulation flush: every node's open
+    blocked/idle interval must be closed at the horizon, so per-node
+    ``busy + blocked + idle == horizon`` exactly (up to float summation).
+    Before the fix the open blocked interval of a backpressured node was
+    silently dropped and the books did not balance."""
+    from repro.sim.engine import _simulate_chain
+    rng = np.random.default_rng(seed)
+    tr = _fuzz_trace(kind, 120, seed)
+    service = [lambda sz, f=float(rng.uniform(5e4, 5e5)): sz * f + 1e3
+               for _ in range(m)]
+    caps = [len(tr) + 1] + [1] * (m - 1)      # depth-1: maximal blocking
+    completions, busy, blocked, idle, _, _ = _simulate_chain(
+        tr.arrivals, tr.sizes, service, caps, engine=engine)
+    horizon = float(np.max(completions))
+    total = np.asarray(busy) + np.asarray(blocked) + np.asarray(idle)
+    assert np.allclose(total, horizon, rtol=1e-9, atol=1e-6)
+    if m > 1:
+        assert np.asarray(blocked)[:-1].sum() >= 0.0
+        assert np.asarray(idle).min() >= 0.0
+
+
+def test_simulate_partition_engine_parameter_and_idle_field():
+    """``simulate_partition(engine=...)`` dispatches both engines and the
+    report's new ``idle`` column completes the per-node time budget."""
+    layers = sparse_cnn_workload(RESNET18, seed=9)
+    tpu = TPUModel(chips=3)
+    p = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=3,
+                           batch=16, dse_iters=80)
+    tr = poisson_trace(120, request_rate(p.steady_throughput, 0.5, 16),
+                       sizes=16, seed=0)
+    a = simulate_partition(layers, tpu, p, tr, engine="heap")
+    b = simulate_partition(layers, tpu, p, tr, engine="calendar")
+    assert np.array_equal(a.completions, b.completions)
+    assert np.array_equal(a.idle, b.idle)
+    assert np.allclose(a.busy + a.blocked + a.idle, a.horizon, rtol=1e-9)
+    with pytest.raises(ValueError, match="engine"):
+        simulate_partition(layers, tpu, p, tr, engine="quantum")
+
+
+# --------------------------------------------------------------------- #
 # SLO-aware partition search
 # --------------------------------------------------------------------- #
 def _slo_setup(seed=0):
