@@ -27,6 +27,14 @@ Sections, saved to ``experiments/search_bench.json``:
     theorem. Reported, plus a weak >=1 warm-hit gate.
   * ``liar``  — constant-liar vs independent-draw batch proposals at equal
     trial budget (report-only: search quality, not speed).
+  * ``batch`` — proposal-batched DSE (DESIGN.md §15): both arms run the
+    full acceleration subsystem, but the serial arm pins
+    ``batch_dse=False`` so every proposal of a TPE wave pays its own
+    engine dispatch, while the batch arm advances the whole wave in ONE
+    ``incremental_dse_batch`` invocation. Gate: bit-identical trial
+    sequences always; >=BATCH_GATEx wall-clock when the compiled C
+    backend is available (the numpy lockstep fallback is correctness-only
+    and exempt from the speed gate).
 
     PYTHONPATH=src:. python benchmarks/search_bench.py [--smoke]
 """
@@ -47,6 +55,8 @@ from repro.core.perf_model import (FPGAModel, TPUModel, lm_block_bounds,
 SPEED_GATE = 5.0          # end-to-end accel-vs-seed search speedup
 SWEEP_GATE_FULL = 10.0    # cold-DSE-run reduction in the deployment sweep
 SWEEP_GATE_SMOKE = 4.0    # smoke runs fewer chip counts -> less reuse
+BATCH_GATE_FULL = 3.0     # batched-wave vs per-proposal engine dispatch
+BATCH_GATE_SMOKE = 2.0    # smoke runs fewer waves -> less amortization
 
 
 def _assert_identical(a, b, tag):
@@ -138,6 +148,59 @@ def bench_lm(models, iters: int, seed: int = 0, dse_iters: int = 300):
         assert speedup >= SPEED_GATE, \
             f"{name} search speedup regressed: {speedup:.1f}x < {SPEED_GATE}x"
     return rows, best
+
+
+def bench_batch(iters: int, gate: float, seed: int = 0, batch_size: int = 8,
+                dse_iters: int = 300, reps: int = 5):
+    """Proposal-batched DSE vs per-proposal dispatch, same fixed-seed
+    search. Unlike the cnn/lm sections (subsystem vs seed path), BOTH arms
+    here run the full acceleration subsystem — cache, warm starts, grouped
+    C engine — and differ only in ``batch_dse``: the serial arm walks a
+    TPE wave proposal by proposal (one ``dse_vec`` per member), the batch
+    arm hands the whole wave to ``DSECache.dse_vec_batch`` which runs all
+    cold members in one ``incremental_dse_batch`` engine invocation.
+    Bit-identical trial sequences are asserted on every repetition; the
+    wall-clock gate applies only with the compiled backend (the numpy
+    lockstep fallback interprets the batch loop and is correctness-only).
+    """
+    from repro.core import _dse_ckernel
+    cfg = get_config("qwen3-0.6b")
+    tpu = TPUModel()
+    kw = dict(iters=iters, seed=seed, include_act=False,
+              batch_size=batch_size, liar=None)
+
+    def make(batch_dse):
+        return LMEvaluator(cfg, tpu, tpu.chip_budget, dse_iters=dse_iters,
+                           batch_dse=batch_dse)
+
+    # min over fresh-evaluator repetitions per arm: both arms are tens of
+    # milliseconds, so the min is the only load-robust estimator here
+    t_s = t_a = float("inf")
+    for _ in range(reps):
+        ev_s, ev_a = make(False), make(True)
+        r_s, dt = _timed_search(ev_s, ev_s.n_search, **kw)
+        t_s = min(t_s, dt)
+        r_a, dt = _timed_search(ev_a, ev_a.n_search, **kw)
+        t_a = min(t_a, dt)
+        _assert_identical(r_s, r_a, "batch")
+    compiled = _dse_ckernel.get_lib() is not None
+    speedup = t_s / t_a
+    row = {"model": "qwen3-0.6b", "iters": iters, "batch_size": batch_size,
+           "engine": "compiled" if compiled else "lockstep",
+           "serial_ms": round(t_s * 1e3, 1), "batched_ms": round(t_a * 1e3, 1),
+           "speedup": round(speedup, 2), "gate": gate,
+           "best_score": r_a.best_score,
+           "cache": ev_a.dse_cache.stats()}
+    print(f"  batch qwen3-0.6b  {iters:3d} trials/wave={batch_size}  "
+          f"per-proposal={t_s * 1e3:6.1f}ms  batched={t_a * 1e3:6.1f}ms  "
+          f"{speedup:5.2f}x  (identical trials, {row['engine']} engine)")
+    if compiled:
+        assert speedup >= gate, \
+            f"batched-DSE speedup regressed: {speedup:.2f}x < {gate}x"
+    else:
+        print("  batch: compiled backend unavailable -> lockstep fallback, "
+              "speed gate skipped (identity still asserted)")
+    return row
 
 
 def bench_sweep(stacks, chips_list, batches, dse_iters: int):
@@ -256,6 +319,9 @@ def run(smoke: bool = False):
     print("hass_search end-to-end: seed path vs acceleration subsystem")
     cnn_row, cnn_ev, cnn_res = bench_cnn(cnn_iters)
     lm_rows, lm_best = bench_lm(lm_models, lm_iters, dse_iters=dse_iters)
+    batch_row = bench_batch(lm_iters,
+                            gate=BATCH_GATE_SMOKE if smoke else BATCH_GATE_FULL,
+                            dse_iters=dse_iters, reps=3 if smoke else 5)
 
     stacks = [("resnet18", cnn_ev.sparse_layers(cnn_res.best_x), None)]
     for name, (ev, r) in lm_best.items():
@@ -282,14 +348,17 @@ def run(smoke: bool = False):
     worst = min([cnn_row["speedup"]] + [r["speedup"] for r in lm_rows])
     payload = {"smoke": smoke, "speed_gate": SPEED_GATE,
                "sweep_gate": sweep_gate, "cnn": cnn_row, "lm": lm_rows,
-               "sweep": sweep_rows, "sensitivity": sens_row,
-               "liar": liar_rows, "worst_search_speedup": worst,
+               "batch": batch_row, "sweep": sweep_rows,
+               "sensitivity": sens_row, "liar": liar_rows,
+               "worst_search_speedup": worst,
                "worst_sweep_reduction": worst_red}
     save_json("search_bench.json", payload)
     emit("search_bench.hass_search",
          (cnn_row["accel_s"] + sum(r["accel_s"] for r in lm_rows)) * 1e6,
          f"worst_speedup={worst:.1f}x (gate {SPEED_GATE}x) "
-         f"sweep_cold_reduction={worst_red:.1f}x (gate {sweep_gate}x), "
+         f"sweep_cold_reduction={worst_red:.1f}x (gate {sweep_gate}x) "
+         f"batched_dse={batch_row['speedup']:.2f}x "
+         f"(gate {batch_row['gate']}x), "
          f"iso-results asserted trial-for-trial")
     return payload
 

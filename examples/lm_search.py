@@ -68,6 +68,11 @@ def main() -> None:
     targets = ", ".join(f"{n}={s:.2f}" for n, s in
                         zip(ev.group_names, res.best_x[:ev.n_search]))
     print(f"tile-sparsity targets: {targets}")
+    st = ev.dse_cache.stats()
+    print(f"search DSECache: {st['cold_runs']} cold engine runs, "
+          f"{st['hits']} exact hits, warm starts "
+          f"L1={st['warm_l1']} (floor-stability) "
+          f"L2={st['warm_l2']} (t-vector certificate)")
 
     if args.chips <= 1:
         return
@@ -92,7 +97,8 @@ def main() -> None:
               f"{time.perf_counter() - t0:.1f}s)")
     st = cache.stats()
     print(f"  shared DSECache: {st['cold_runs']} cold segment DSEs, "
-          f"{st['hits']} exact + {st['warm_hits']} warm reuses "
+          f"{st['hits']} exact + {st['warm_l1']} warm-L1 + "
+          f"{st['warm_l2']} warm-L2 reuses "
           f"(maxmin re-reads the sum DP's frontiers; never worse on the "
           f"steady rate — DESIGN.md §11/§12)")
 

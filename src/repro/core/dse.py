@@ -18,10 +18,12 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
+from itertools import repeat
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import _dse_ckernel
 from repro.core.annealing import simulated_annealing
 from repro.core.perf_model import (ACT_BYTES, DesignPoint, HardwareModel,
                                    LayerCost, LayerVectors, TPUModel,
@@ -72,21 +74,21 @@ def _frontier_keep(res_pts: List[float], thr_pts: List[float]) -> List[int]:
     the final (Eq. 4-trimmed) result: it is made the canonical representative
     of its throughput level (using the DSE's own 1e-9 bottleneck tolerance)
     so near-duplicate as-searched states never shadow it under
-    ``best_under``."""
-    f_res, f_thr = res_pts[-1], thr_pts[-1]
+    ``best_under``. Vectorized; (res, -thr) ordering ties resolve to the
+    earliest row both here (stable lexsort) and in the scalar original
+    (stable list sort), so the kept set is unchanged."""
+    r = np.asarray(res_pts, dtype=np.float64)
+    t = np.asarray(thr_pts, dtype=np.float64)
+    f_res, f_thr = r[-1], t[-1]
     lo, hi = f_thr * (1 - 1e-9), f_thr * (1 + 1e-9)
-    idx = [i for i in range(len(res_pts) - 1)
-           if not (lo <= thr_pts[i] <= hi)
-           and not (res_pts[i] >= f_res and thr_pts[i] <= hi)]
-    idx.append(len(res_pts) - 1)
-    idx.sort(key=lambda i: (res_pts[i], -thr_pts[i]))
-    keep: List[int] = []
-    best = -math.inf
-    for i in idx:
-        if thr_pts[i] > best:
-            keep.append(i)
-            best = thr_pts[i]
-    return keep
+    m = ~(((t >= lo) & (t <= hi)) | ((r >= f_res) & (t <= hi)))
+    m[-1] = True
+    idx = np.nonzero(m)[0]
+    idx = idx[np.lexsort((-t[idx], r[idx]))]
+    tt = t[idx]
+    run_max = np.maximum.accumulate(
+        np.concatenate(([-np.inf], tt[:-1])))
+    return idx[tt > run_max].tolist()
 
 
 def _build_frontier(res_pts: List[float], thr_pts: List[float],
@@ -646,36 +648,55 @@ def _run_incremental_grouped(lv: LayerVectors, hw: HardwareModel,
     balance(theta_r * (1 - 1e-12), skip=protected)
     f_thr = scan_min()[0]
 
-    # frontier assembly: replay the mutation log once, materializing the
-    # kept rows (row j's state = initial + muts[0..j-1]); the final entry
-    # is the post-trim state, one replay step past the last row
     res_pts = [r for r, _ in trace] + [res_total]
     thr_pts = [t for _, t in trace] + [f_thr]
-    keep = _frontier_keep(res_pts, thr_pts)
-    keep_set = set(keep)
-    spe_r = [1] * L
-    n_r = [1] * L
-    kept: Dict[int, Tuple[List[int], List[int]]] = {}
-    last = len(res_pts) - 1
-    for j in range(len(trace)):         # trace rows: state BEFORE muts[j]
-        if j in keep_set:
-            kept[j] = (spe_r.copy(), n_r.copy())
-        for p, s_m, n_m in muts[j]:
-            spe_r[p] = s_m
-            n_r[p] = n_m
-    for p, s_m, n_m in muts[-1]:        # final Eq. 4 pass
-        spe_r[p] = s_m
-        n_r[p] = n_m
-    kept[last] = (spe_r.copy(), n_r.copy())
-    frontier = ParetoFrontier(
-        res=np.array([res_pts[i] for i in keep], dtype=np.float64),
-        thr=np.array([thr_pts[i] for i in keep], dtype=np.float64),
-        spe=np.array([kept[i][0] for i in keep],
-                     dtype=np.int64).reshape(len(keep), L),
-        n=np.array([kept[i][1] for i in keep],
-                   dtype=np.int64).reshape(len(keep), L))
+    frontier = _frontier_from_muts(res_pts, thr_pts, muts, L)
     return (np.array(spe_l, dtype=np.int64), np.array(n_l, dtype=np.int64),
             f_thr, res_total, trace, frontier, theta_r)
+
+
+def _frontier_from_muts(res_pts: List[float], thr_pts: List[float],
+                        muts: List[List[Tuple[int, int, int]]],
+                        L: int) -> ParetoFrontier:
+    """Frontier assembly from a per-row mutation log: replay the log once,
+    materializing the kept rows (row j's state = initial + muts[0..j-1]);
+    the final point is the post-trim state, one replay step past the last
+    row (``muts[-1]`` is the final Eq. 4 pass). Shared by the grouped and
+    proposal-batched engines, which keep O(changes) mutation rows instead
+    of the flat engine's O(L) per-row snapshots. A row is either a list of
+    (p, s, n) mutations or — the batched engine's wave rows, which mutate
+    exactly one layer — a bare (p, s, n) tuple."""
+    keep = _frontier_keep(res_pts, thr_pts)
+    keep_set = set(keep)
+    spe_r = np.ones(L, dtype=np.int64)
+    n_r = np.ones(L, dtype=np.int64)
+    kept: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+    last = len(res_pts) - 1
+    for j in range(last):               # trace rows: state BEFORE muts[j]
+        if j in keep_set:
+            kept[j] = (spe_r.copy(), n_r.copy())
+        row = muts[j]
+        if type(row) is tuple:
+            spe_r[row[0]] = row[1]
+            n_r[row[0]] = row[2]
+        else:
+            for p, s_m, n_m in row:
+                spe_r[p] = s_m
+                n_r[p] = n_m
+    row = muts[-1]                      # final Eq. 4 pass
+    if type(row) is tuple:
+        spe_r[row[0]] = row[1]
+        n_r[row[0]] = row[2]
+    else:
+        for p, s_m, n_m in row:
+            spe_r[p] = s_m
+            n_r[p] = n_m
+    kept[last] = (spe_r, n_r)
+    return ParetoFrontier(
+        res=np.array([res_pts[i] for i in keep], dtype=np.float64),
+        thr=np.array([thr_pts[i] for i in keep], dtype=np.float64),
+        spe=np.stack([kept[i][0] for i in keep]),
+        n=np.stack([kept[i][1] for i in keep]))
 
 
 def _run_dse(lv: LayerVectors, hw: HardwareModel, budget: float,
@@ -694,6 +715,470 @@ def _run_dse(lv: LayerVectors, hw: HardwareModel, budget: float,
     if engine != "flat":
         raise ValueError(f"unknown engine {engine!r}")
     return _run_incremental(lv, hw, budget, max_iters)
+
+
+# --------------------------------------------------------------------- #
+# Proposal-batched engine (DESIGN.md §15): one array program advances all
+# k proposals of a TPE wave at once, bit-exact per proposal.
+# --------------------------------------------------------------------- #
+def _run_incremental_batch(lv: LayerVectors, hw: HardwareModel,
+                           budget: float, s_eff_batch: np.ndarray,
+                           max_iters: int):
+    """Proposal-batched §V-A.3 greedy: B independent flat-engine runs over
+    one shared workload template, advanced in lockstep on (B, L) arrays —
+    per round, every still-active proposal takes its next real growth step
+    in one array program (argmin, option scoring, strict balance), and
+    proposals whose run has converged (no growth option / budget break /
+    max_iters) are masked out. Wave runs — the grouped engine's batching of
+    identical lagging-copy growths — collapse per proposal into O(wave)
+    Python bookkeeping between rounds, so a kind-tied LM stack costs
+    ~#distinct-growth-decisions rounds, not ~max_iters (DESIGN.md §15).
+
+    Bit-exactness per proposal vs ``_run_incremental`` rests on three
+    facts. (1) Proposals never interact: every array op is elementwise per
+    proposal row, with float semantics identical to the flat engine's
+    scalar expressions (same operation order; products < 2**53, the
+    ``throughput_vec`` invariant). (2) ``res_total`` float accumulation
+    replays the flat engine's ascending-layer order: balance deltas are
+    applied column-by-column in ascending layer order and adding the 0.0
+    of an untouched (proposal, layer) cell is an exact identity. (3) Wave
+    runs generalize the grouped engine's argument to the whole tied set:
+    the flat engine's next argmins are exactly the ascending tied
+    positions, each growth applies that copy's own class decision, and
+    while every grown copy strictly improves and is unshrinkable at
+    ``lo = cur*(1+1e-9)`` the interleaved balance passes are no-ops — so
+    the prefix of the tied set satisfying the per-copy conditions (minus a
+    last copy, whose growth moves the pipeline minimum) advances in one
+    bookkeeping sweep instead of one round each (DESIGN.md §15).
+
+    Returns a list of B (spe, n, f_thr, res, trace, frontier, theta_r)
+    tuples, each bit-identical to the serial engines' output.
+    """
+    S = np.ascontiguousarray(s_eff_batch, dtype=np.float64)
+    B, L = S.shape
+    macs = lv.macs
+    m_dot = lv.m_dot
+    max_n = lv.max_n
+    max_spe = lv.max_spe
+    unit = lv.res_unit
+    nz = macs > 0
+    has_zero = not bool(nz.all())
+    # (1 - s_eff) * m_dot, the t_cycles numerator — scalar op order kept
+    omsm = (1.0 - S) * m_dot
+
+    # design-state n is always >= 1 (floors at 1, candidates are clipped),
+    # so the scalar engine's max(nn, 1) divisor guard is an identity here
+    def rates_pre(om, md, mc, nzm, s_a, n_a):
+        """Eq. 1-2 on pre-gathered constants — float-for-float the flat
+        engine's ``thr_of`` (``throughput_vec`` invariant)."""
+        t = np.maximum(1.0, np.ceil(om / n_a))
+        r = (s_a * md) / (mc * t)
+        return np.where(nzm, r, np.inf) if has_zero else r
+
+    def rates(spe_a, n_a):
+        """Eq. 1-2 on full (B, L) state arrays."""
+        return rates_pre(omsm, m_dot, macs, nz, spe_a, n_a)
+
+    spe = np.ones((B, L), dtype=np.int64)
+    n = np.ones((B, L), dtype=np.int64)
+    # exact flat-engine float: sum(res_unit) in ascending position order
+    res0 = 0.0
+    for u in unit.tolist():
+        res0 += u
+    res = np.full(B, res0, dtype=np.float64)
+    it = np.zeros(B, dtype=np.int64)
+    active = np.ones(B, dtype=bool)
+    trace: List[List[Tuple[float, float]]] = [[] for _ in range(B)]
+    muts: List[list] = [[] for _ in range(B)]
+    ar = np.arange(B)
+
+    # maintained rate views of the design state — thr == rates(spe, n) and
+    # r_nh/r_sh are the one-halving rates (the flat engine's thr_nh/thr_sh
+    # trick at (B, L)); refreshed at exactly the cells whose (spe, n)
+    # changed, so steady-state rounds do O(changed) rate math, not O(B*L)
+    thr = rates(spe, n)
+    r_nh = thr.copy()               # n == 1: halving is the identity
+    r_sh = thr.copy()               # spe == 1
+
+    def refresh(bi, li):
+        """Recompute the maintained rates at the given gathered cells."""
+        s_g = spe[bi, li]
+        n_g = n[bi, li]
+        om = omsm[bi, li]
+        md = m_dot[li]
+        mc = macs[li]
+        nzm = nz[li]
+        thr[bi, li] = rates_pre(om, md, mc, nzm, s_g, n_g)
+        r_nh[bi, li] = rates_pre(om, md, mc, nzm, s_g,
+                                 np.maximum(1, n_g >> 1))
+        r_sh[bi, li] = rates_pre(om, md, mc, nzm,
+                                 np.maximum(1, s_g >> 1), n_g)
+
+    def balance(lo, mask, skip_rows=None, skip_cols=None, protect=None):
+        """One vectorized Eq. 4-5 pass at per-proposal fixed ``lo`` over
+        the proposals in ``mask``. ``skip_rows``/``skip_cols`` protect one
+        (proposal, layer) cell each (the just-grown layer); ``protect`` is
+        a (B, L) bool mask (the final pass's bottleneck set). Entry reads
+        the maintained halving rates; the shrink chains then run on the
+        gathered entered cells only, each cell taking the flat engine's
+        preferred feasible halving (n first) per step. Mutation rows are
+        appended and res deltas accumulated per proposal in ascending
+        layer order — the flat engine's float summation, term for term.
+        Returns the changed cells' (bi, li, prev_spe, prev_n) so a budget
+        revert can restore and re-``refresh`` exactly those cells."""
+        lo2 = lo[:, None]
+        ent = mask[:, None] & (((n > 1) & (r_nh >= lo2)) |
+                               ((spe > 1) & (r_sh >= lo2)))
+        if protect is not None:
+            ent &= ~protect
+        if skip_rows is not None:
+            ent[skip_rows, skip_cols] = False
+        if not ent.any():
+            return None
+        bi, li = np.nonzero(ent)        # row-major: ascending li per row
+        s_g = spe[bi, li]
+        n_g = n[bi, li]
+        ps = s_g.copy()
+        pn = n_g.copy()
+        om = omsm[bi, li]
+        md = m_dot[li]
+        mc = macs[li]
+        nzm = nz[li]
+        lo_g = lo[bi]
+        while True:
+            cn = np.maximum(1, n_g >> 1)
+            ok_n = (cn != n_g) & \
+                (rates_pre(om, md, mc, nzm, s_g, cn) >= lo_g)
+            cs = np.maximum(1, s_g >> 1)
+            ok_s = ~ok_n & (cs != s_g) & \
+                (rates_pre(om, md, mc, nzm, cs, n_g) >= lo_g)
+            if not (ok_n.any() or ok_s.any()):
+                break
+            n_g[ok_n] = cn[ok_n]
+            s_g[ok_s] = cs[ok_s]
+        spe[bi, li] = s_g
+        n[bi, li] = n_g
+        refresh(bi, li)
+        delta = ((s_g * n_g - ps * pn) * unit[li]).tolist()
+        li_l = li.tolist()
+        s_l = s_g.tolist()
+        n_l = n_g.tolist()
+        starts = np.searchsorted(bi, ar)
+        ends = np.searchsorted(bi, ar, side="right")
+        for b in np.unique(bi).tolist():
+            r = float(res[b])
+            row = muts[b][-1]
+            for j in range(int(starts[b]), int(ends[b])):
+                r += delta[j]
+                row.append((li_l[j], s_l[j], n_l[j]))
+            res[b] = r
+        return bi, li, ps, pn
+
+    while active.any():
+        cur = thr.min(axis=1)
+        slow = thr.argmin(axis=1)       # first minimum — thr.index(min)
+        sl_s = spe[ar, slow]
+        sl_n = n[ar, slow]
+        sl_unit = unit[slow]
+        sl_maxn = max_n[slow]
+        sl_maxs = max_spe[slow]
+        om_s = omsm[ar, slow]
+        md_s = m_dot[slow]
+        mc_s = macs[slow]
+        nz_s = nz[slow]
+        cur_res = sl_s * sl_n * sl_unit
+        # candidate increments (macs_per_spe doubling first — wins ties)
+        have_n = sl_n < sl_maxn
+        n2 = np.minimum(sl_n * 2, sl_maxn)
+        dres_n = sl_s * n2 * sl_unit - cur_res
+        score_n = (rates_pre(om_s, md_s, mc_s, nz_s, sl_s, n2) - cur) / \
+            np.maximum(dres_n, 1e-9)
+        have_s = sl_s < sl_maxs
+        s2 = np.minimum(sl_s * 2, sl_maxs)
+        dres_s = s2 * sl_n * sl_unit - cur_res
+        score_s = (rates_pre(om_s, md_s, mc_s, nz_s, s2, sl_n) - cur) / \
+            np.maximum(dres_s, 1e-9)
+        use_s = have_s & (~have_n | (score_s > score_n))
+        b_s = np.where(use_s, s2, sl_s)
+        b_n = np.where(use_s, sl_n, n2)
+        none = ~(have_n | have_s)
+        grown_rate = rates_pre(om_s, md_s, mc_s, nz_s, b_s, b_n)
+        dgrow = (b_s * b_n - sl_s * sl_n) * sl_unit
+        grow = active & ~none
+        # wave pre-check (round-start state, before any mutation): the flat
+        # engine's next argmins are exactly the ascending positions tied at
+        # ``cur``, so compute each tied copy's own growth decision and take
+        # the prefix whose grown designs all strictly improve and are
+        # unshrinkable at lo = cur*(1+1e-9) — those flat iterations have
+        # no-op balance passes and collapse into bookkeeping (DESIGN.md §15)
+        wave: Dict[int, Tuple[np.ndarray, ...]] = {}
+        tied_m = grow[:, None] & (thr == cur[:, None])
+        t_cnt = tied_m.sum(axis=1)
+        rows_w = (t_cnt >= 2) & (it < max_iters - 1)
+        if rows_w.any():
+            tied_m &= rows_w[:, None]
+            bi, li = np.nonzero(tied_m)   # row-major: ascending positions
+            t_s = spe[bi, li]
+            t_n = n[bi, li]
+            t_u = unit[li]
+            t_mn = max_n[li]
+            t_ms = max_spe[li]
+            t_cur = cur[bi]
+            om_t = omsm[bi, li]
+            md_t = m_dot[li]
+            mc_t = macs[li]
+            nz_t = nz[li]
+            t_res = t_s * t_n * t_u
+            t_hn = t_n < t_mn
+            t_n2 = np.minimum(t_n * 2, t_mn)
+            t_scn = (rates_pre(om_t, md_t, mc_t, nz_t, t_s, t_n2) -
+                     t_cur) / np.maximum(t_s * t_n2 * t_u - t_res, 1e-9)
+            t_hs = t_s < t_ms
+            t_s2 = np.minimum(t_s * 2, t_ms)
+            t_scs = (rates_pre(om_t, md_t, mc_t, nz_t, t_s2, t_n) -
+                     t_cur) / np.maximum(t_s2 * t_n * t_u - t_res, 1e-9)
+            t_us = t_hs & (~t_hn | (t_scs > t_scn))
+            w_s = np.where(t_us, t_s2, t_s)
+            w_n = np.where(t_us, t_n, t_n2)
+            w_gr = rates_pre(om_t, md_t, mc_t, nz_t, w_s, w_n)
+            w_dg = (w_s * w_n - t_s * t_n) * t_u
+            w_lo = t_cur * (1 + 1e-9)
+            w_nh = rates_pre(om_t, md_t, mc_t, nz_t, w_s,
+                             np.maximum(1, w_n >> 1))
+            w_sh = rates_pre(om_t, md_t, mc_t, nz_t,
+                             np.maximum(1, w_s >> 1), w_n)
+            w_shr = ((w_n > 1) & (w_nh >= w_lo)) | \
+                    ((w_s > 1) & (w_sh >= w_lo))
+            ok = (t_hn | t_hs) & (w_gr > t_cur) & ~w_shr
+            starts = np.searchsorted(bi, ar)
+            ends = np.searchsorted(bi, ar, side="right")
+            for b in np.nonzero(rows_w)[0].tolist():
+                lo_i, hi_i = int(starts[b]), int(ends[b])
+                okb = ok[lo_i:hi_i]
+                m = hi_i - lo_i
+                k = int(np.argmin(okb)) if not okb.all() else m
+                # leave the last tied copy for a real round (its growth
+                # moves the pipeline minimum, so its balance lo differs)
+                w = min(min(k, m - 1) - 1, int(max_iters - it[b] - 1))
+                if w > 0:
+                    sl = slice(lo_i + 1, lo_i + 1 + w)
+                    wave[b] = (li[sl], w_s[sl], w_n[sl], w_dg[sl],
+                               w_gr[sl], w_nh[sl], w_sh[sl])
+        # record the round's trace rows; option-less proposals stop here
+        res_l = res.tolist()
+        cur_l = cur.tolist()
+        for b in np.nonzero(active)[0].tolist():
+            trace[b].append((res_l[b], cur_l[b]))
+            muts[b].append([])
+        active &= ~none
+        if not grow.any():
+            break
+        old_res = res.copy()
+        # apply the growth, strict-balance everyone else, keep if affordable
+        res[grow] += dgrow[grow]
+        bi_g = ar[grow]
+        li_g = slow[grow]
+        spe[bi_g, li_g] = b_s[grow]
+        n[bi_g, li_g] = b_n[grow]
+        refresh(bi_g, li_g)
+        slow_l = slow.tolist()
+        bs_l = b_s.tolist()
+        bn_l = b_n.tolist()
+        for b in np.nonzero(grow)[0].tolist():
+            muts[b][-1].append((slow_l[b], bs_l[b], bn_l[b]))
+        m_after = thr.min(axis=1)       # fresh min, the flat engine's floats
+        bal = balance(m_after * (1 + 1e-9), grow, skip_rows=bi_g,
+                      skip_cols=li_g)
+        it[grow] += 1
+        over = grow & (res > budget)
+        if over.any():
+            ob = np.nonzero(over)[0]
+            spe[ob, slow[ob]] = sl_s[ob]
+            n[ob, slow[ob]] = sl_n[ob]
+            refresh(ob, slow[ob])
+            if bal is not None:
+                bbi, bli, bps, bpn = bal
+                bm = over[bbi]
+                if bm.any():
+                    spe[bbi[bm], bli[bm]] = bps[bm]
+                    n[bbi[bm], bli[bm]] = bpn[bm]
+                    refresh(bbi[bm], bli[bm])
+            res[over] = old_res[over]
+            for b in ob.tolist():
+                muts[b][-1] = []
+            active &= ~over
+        # batched wave steps (flat iterations 2..wave+1 of each run):
+        # np.cumsum is strictly sequential addition, so it replays the flat
+        # engine's per-copy ``res += dgrow`` float chain term for term
+        for b in np.nonzero(grow & ~over)[0].tolist():
+            got = wave.get(b)
+            if got is None:
+                continue
+            wpos, ws, wn, wdg, wgr, wnh, wsh = got
+            c_b = cur_l[b]
+            r_seq = np.cumsum(np.concatenate(([res[b]], wdg)))
+            w = len(wpos)
+            over_j = np.nonzero(r_seq[1:] > budget)[0]
+            steps = w if over_j.size == 0 else int(over_j[0]) + 1
+            done = steps if over_j.size == 0 else steps - 1
+            trace[b].extend(zip(r_seq[:steps].tolist(), repeat(c_b, steps)))
+            muts[b].extend(zip(wpos[:done].tolist(), ws[:done].tolist(),
+                               wn[:done].tolist()))
+            if over_j.size:
+                muts[b].append([])
+                active[b] = False
+            res[b] = r_seq[done]
+            cp = wpos[:done]
+            spe[b, cp] = ws[:done]
+            n[b, cp] = wn[:done]
+            thr[b, cp] = wgr[:done]
+            r_nh[b, cp] = wnh[:done]
+            r_sh[b, cp] = wsh[:done]
+            it[b] += steps
+        active &= it < max_iters
+
+    # final literal Eq. 4 pass: trim over-provision, keep the bottleneck set
+    theta = thr.min(axis=1)
+    protect = thr <= (theta * (1 + 1e-9))[:, None]
+    for b in range(B):
+        muts[b].append([])
+    balance(theta * (1 - 1e-12), np.ones(B, dtype=bool), protect=protect)
+    f_thr = thr.min(axis=1)
+
+    out = []
+    for b in range(B):
+        res_pts = [r for r, _ in trace[b]] + [float(res[b])]
+        thr_pts = [t for _, t in trace[b]] + [float(f_thr[b])]
+        frontier = _frontier_from_muts(res_pts, thr_pts, muts[b], L)
+        out.append((spe[b].copy(), n[b].copy(), float(f_thr[b]),
+                    float(res[b]), trace[b], frontier, float(theta[b])))
+    return out
+
+
+def _run_incremental_batch_c(lv: LayerVectors, hw: HardwareModel,
+                             budget: float, s_eff_batch: np.ndarray,
+                             max_iters: int, lib):
+    """Compiled-backend batched greedy: B independent flat-engine runs in
+    one C call (``_dse_ckernel``), plus numpy/C post-processing that
+    rebuilds each proposal's trace, frontier and final state. Bit-exact vs
+    ``_run_incremental`` by construction — the kernel is a scalar-for-
+    scalar port (see the float contract in ``_dse_ckernel``) and the
+    frontier path reuses ``_frontier_keep`` on the kernel's own (res, thr)
+    points with design snapshots replayed from the kernel's mutation log
+    (``dse_replay``), the grouped engine's ``_frontier_from_muts`` scheme
+    with the replay loop in C."""
+    S = np.ascontiguousarray(s_eff_batch, dtype=np.float64)
+    B, L = S.shape
+    omsm = np.ascontiguousarray((1.0 - S) * lv.m_dot)
+    m_dot = np.ascontiguousarray(lv.m_dot, dtype=np.float64)
+    macs = np.ascontiguousarray(lv.macs, dtype=np.float64)
+    unit = np.ascontiguousarray(lv.res_unit, dtype=np.float64)
+    max_n = np.ascontiguousarray(lv.max_n, dtype=np.int64)
+    max_spe = np.ascontiguousarray(lv.max_spe, dtype=np.int64)
+    # mutation-stream bound: every growth row logs 1 mut and <= its own
+    # halvings; total halvings <= total doublings <= max_iters, and the
+    # final trim adds <= L — so 2*max_iters + L covers it (slack for the
+    # clipped-growth edge)
+    M = 2 * max_iters + L + 16
+    spe = np.empty((B, L), dtype=np.int64)
+    n = np.empty((B, L), dtype=np.int64)
+    res = np.empty(B, dtype=np.float64)
+    fthr = np.empty(B, dtype=np.float64)
+    theta = np.empty(B, dtype=np.float64)
+    tr_res = np.empty((B, max_iters), dtype=np.float64)
+    tr_cur = np.empty((B, max_iters), dtype=np.float64)
+    tr_len = np.empty(B, dtype=np.int64)
+    mut_pos = np.empty((B, M), dtype=np.int64)
+    mut_s = np.empty((B, M), dtype=np.int64)
+    mut_n = np.empty((B, M), dtype=np.int64)
+    mut_cnt = np.zeros((B, max_iters + 1), dtype=np.int64)
+    # pointer args are raw addresses (see _dse_ckernel's argtype note):
+    # every array above is freshly allocated here, correct dtype, C order
+    p = (lambda a: a.ctypes.data)
+    rc = lib.dse_run_batch(
+        B, L, max_iters, float(budget), p(omsm), p(S), p(m_dot), p(macs),
+        p(unit), p(max_n), p(max_spe), p(spe), p(n), p(res), p(fthr),
+        p(theta), p(tr_res), p(tr_cur), p(tr_len), p(mut_pos), p(mut_s),
+        p(mut_n), p(mut_cnt), M)
+    if rc:
+        raise RuntimeError("DSE kernel internal error "
+                           f"(code {rc}: mutation overflow or OOM)")
+    w_spe = np.empty(L, dtype=np.int64)
+    w_n = np.empty(L, dtype=np.int64)
+    out = []
+    for b in range(B):
+        T = int(tr_len[b])
+        trace = list(zip(tr_res[b, :T].tolist(), tr_cur[b, :T].tolist()))
+        res_pts = np.append(tr_res[b, :T], res[b])
+        thr_pts = np.append(tr_cur[b, :T], fthr[b])
+        keep = np.asarray(_frontier_keep(res_pts, thr_pts), dtype=np.int64)
+        K = len(keep)
+        order = np.argsort(keep, kind="stable")
+        f_spe = np.empty((K, L), dtype=np.int64)
+        f_n = np.empty((K, L), dtype=np.int64)
+        krows = np.ascontiguousarray(keep[order])   # named: p() takes the
+        mp, ms, mn, mc = (mut_pos[b], mut_s[b], mut_n[b], mut_cnt[b])
+        lib.dse_replay(L, T + 1, p(mp), p(ms), p(mn), p(mc), K, p(krows),
+                       p(f_spe), p(f_n), p(w_spe), p(w_n))   # address only
+        inv = np.empty(K, dtype=np.int64)
+        inv[order] = np.arange(K)
+        frontier = ParetoFrontier(res=res_pts[keep], thr=thr_pts[keep],
+                                  spe=f_spe[inv], n=f_n[inv])
+        out.append((spe[b], n[b], float(fthr[b]), float(res[b]),
+                    trace, frontier, float(theta[b])))
+    return out
+
+
+def _run_batch_dispatch(lv: LayerVectors, hw: HardwareModel, budget: float,
+                        s_eff_batch: np.ndarray, max_iters: int,
+                        engine: str = "auto"):
+    """Batched-engine dispatch: ``compiled`` is the C kernel (DESIGN.md
+    §15), ``lockstep`` the pure-numpy array program; ``auto`` prefers the
+    kernel and falls back when the environment can't build it. Both are
+    bit-exact vs the serial engines (property-tested), so ``auto`` is a
+    pure perf choice — like ``_run_dse``'s."""
+    if engine == "auto":
+        engine = "compiled" if _dse_ckernel.get_lib() is not None \
+            else "lockstep"
+    if engine == "compiled":
+        lib = _dse_ckernel.get_lib()
+        if lib is None:
+            raise RuntimeError("compiled DSE kernel unavailable "
+                               "(no C compiler or REPRO_DSE_CKERNEL=0)")
+        return _run_incremental_batch_c(lv, hw, budget, s_eff_batch,
+                                        max_iters, lib)
+    if engine != "lockstep":
+        raise ValueError(f"unknown batch engine {engine!r}")
+    return _run_incremental_batch(lv, hw, budget,
+                                  np.asarray(s_eff_batch, dtype=np.float64),
+                                  max_iters)
+
+
+def incremental_dse_batch(lv: LayerVectors, hw: HardwareModel,
+                          budget: float, s_eff_batch: np.ndarray,
+                          *, max_iters: int = 10000,
+                          materialize_designs: bool = True,
+                          engine: str = "auto") -> List[DSEResult]:
+    """Batched ``incremental_dse`` over one workload template: row ``b`` of
+    ``s_eff_batch`` (shape (B, L)) is one proposal's effective-sparsity
+    vector; all other workload constants come from ``lv``. Returns B
+    ``DSEResult``s, each bit-identical — designs, throughput, resource,
+    trace, frontier, theta_r — to ``incremental_dse`` on the corresponding
+    single stack (property-tested), at a fraction of B serial runs'
+    wall-clock on kind-tied stacks (DESIGN.md §15). ``engine`` selects the
+    backend (``compiled``/``lockstep``/``auto``). This is the engine under
+    ``DSECache.dse_vec_batch`` / ``hass_search(batch_size=k)``."""
+    rows = _run_batch_dispatch(lv, hw, budget,
+                               np.asarray(s_eff_batch, dtype=np.float64),
+                               max_iters, engine)
+    out = []
+    for spe, n, f_thr, res, trace, frontier, theta_r in rows:
+        designs = _designs_from(spe, n) if materialize_designs else []
+        out.append(DSEResult(designs=designs, throughput=f_thr, resource=res,
+                             throughput_per_res=f_thr / max(res, 1e-9),
+                             trace=trace, frontier=frontier,
+                             theta_r=theta_r))
+    return out
 
 
 def incremental_dse(layers: Sequence[LayerCost], hw: HardwareModel,
@@ -765,35 +1250,72 @@ def incremental_dse_ref(layers: Sequence[LayerCost], hw: HardwareModel,
 
 
 # --------------------------------------------------------------------- #
-# DSECache: memoized warm-start reuse across DSE calls (DESIGN.md §12)
+# DSECache: memoized warm-start reuse across DSE calls (DESIGN.md §12, §15)
 # --------------------------------------------------------------------- #
+def _reachable_n(max_n: int) -> Tuple[int, ...]:
+    """Closure of {1} under the two N moves either engine ever makes —
+    grow ``n -> min(2n, max_n)`` and shrink ``n -> max(1, n >> 1)``. Every
+    N value a layer can hold at any point of any run is in this set
+    (O(log^2 max_n) values), which is what makes the level-2 certificate's
+    t-vector finite (DESIGN.md §15)."""
+    seen = {1}
+    stack = [1]
+    while stack:
+        v = stack.pop()
+        for w in (min(2 * v, max_n), max(1, v >> 1)):
+            if w not in seen:
+                seen.add(w)
+                stack.append(w)
+    return tuple(sorted(seen))
+
+
+_REACHABLE_N_MEMO: Dict[int, Tuple[int, ...]] = {}
+
+
 class DSECache:
     """Exact result reuse for ``incremental_dse`` across a search session.
 
-    Two reuse levels, both bit-exact (property-tested in
+    Three reuse levels, all bit-exact (property-tested in
     ``tests/test_dse_cache.py``):
 
       * **exact** — results are memoized on the full dynamics key: the
         ``s_eff`` float vector plus a fingerprint of the workload constants
         (macs, m_dot, caps, res_unit), budget and max_iters. Equal keys
         replay the identical greedy trajectory by determinism.
-      * **warm** — the floor-stability theorem: a layer whose design the
-        greedy never grows stays at the resource floor (1, 1) for the whole
-        run (shrinking from the floor is impossible), and it is never grown
-        iff its floor rate strictly exceeds ``theta_r``, the run's peak
-        bottleneck rate. Such a layer contributes a constant to every
-        decision the greedy takes — argmin selection, balance feasibility,
-        budget accounting — so two stacks that differ ONLY in layers that
-        are floor-stable on both sides (rate at (1,1) strictly above the
-        cached run's theta_r under both the cached and the query sparsity)
-        have bit-identical DSE results. The certificate is O(L) per cached
-        anchor, vectorized over all anchors; when it cannot be proven the
-        query falls back to a cold run.
+      * **warm level 1** — the floor-stability theorem: a layer whose
+        design the greedy never grows stays at the resource floor (1, 1)
+        for the whole run (shrinking from the floor is impossible), and it
+        is never grown iff its floor rate strictly exceeds ``theta_r``, the
+        run's peak bottleneck rate. Such a layer contributes a constant to
+        every decision the greedy takes — argmin selection, balance
+        feasibility, budget accounting — so two stacks that differ ONLY in
+        layers that are floor-stable on both sides (rate at (1,1) strictly
+        above the cached run's theta_r under both the cached and the query
+        sparsity) have bit-identical DSE results.
+      * **warm level 2** — the dynamics-equivalence certificate for
+        floor-adjacent layers (layers the anchor run DID grow, where level
+        1 can't apply): sparsity reaches the engines only through the
+        cycle count ``t(n) = max(1, ceil((1 - s_eff) * m_dot / n))``, and
+        ``n`` only ever takes values in the layer's reachable-N closure
+        (``_reachable_n``). If a differing layer's float t-vector over
+        that whole closure is equal under the cached and the query
+        sparsity, every rate the engine can ever compute for it is equal
+        float-for-float, so the full decision log replays identically —
+        the anchor's growth events for that layer are re-validated against
+        the query sparsity in one vector compare (DESIGN.md §15 has the
+        proof sketch). When neither certificate can be proven the query
+        falls back to a cold run.
 
     A cold run is the normal engine (grouped/flat dispatch), so a cache
-    MISS costs one array compare more than no cache at all. Results handed
-    out are shared objects — treat them as immutable.
+    MISS costs one array compare (plus at most ``_L2_CANDIDATES`` t-vector
+    compares) more than no cache at all. Results handed out are shared
+    objects — treat them as immutable.
     """
+
+    #: miss-path bound: level-2 certificates are attempted on at most this
+    #: many anchors (the ones with the fewest unproven layers), keeping the
+    #: worst-case miss overhead flat as anchors accumulate
+    _L2_CANDIDATES = 8
 
     def __init__(self, max_entries: int = 256,
                  materialize_designs: bool = True):
@@ -804,15 +1326,25 @@ class DSECache:
         self.max_entries = max_entries
         self.materialize_designs = materialize_designs
         self.hits = 0
-        self.warm_hits = 0
+        self.warm_l1 = 0
+        self.warm_l2 = 0
         self.cold_runs = 0
         # fingerprint -> {s_eff bytes -> DSEResult}
         self._exact: Dict[int, Dict[bytes, DSEResult]] = {}
-        # fingerprint -> [s_eff rows], [rate11 rows], [theta_r], [result]
+        # fingerprint -> [s_eff rows], [rate11 rows], [theta_r], [t-vecs],
+        #                [result]
         self._anchors: Dict[int, list] = {}
+        # fingerprint -> (flat reachable-N, per-layer segment starts)
+        self._nlayout: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+    @property
+    def warm_hits(self) -> int:
+        """Back-compat aggregate: warm reuses at either certificate level."""
+        return self.warm_l1 + self.warm_l2
 
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "warm_hits": self.warm_hits,
+                "warm_l1": self.warm_l1, "warm_l2": self.warm_l2,
                 "cold_runs": self.cold_runs}
 
     @staticmethod
@@ -830,31 +1362,81 @@ class DSECache:
             r = lv.m_dot / (lv.macs * t)
         return np.where(lv.macs > 0, r, np.inf)
 
-    def dse_vec(self, lv: LayerVectors, hw: HardwareModel, budget: float,
-                *, max_iters: int = 10000, engine: str = "auto") -> DSEResult:
-        fp = self._fingerprint(lv, budget, max_iters)
-        s_eff = np.ascontiguousarray(lv.s_eff, dtype=np.float64)
-        key = s_eff.tobytes()
+    def _layout(self, fp: int, lv: LayerVectors):
+        """(flat_N, starts) for this workload: per-layer reachable-N sets
+        concatenated, plus ``reduceat`` segment starts."""
+        lay = self._nlayout.get(fp)
+        if lay is None:
+            sets = []
+            for mn in lv.max_n.tolist():
+                ns = _REACHABLE_N_MEMO.get(mn)
+                if ns is None:
+                    ns = _REACHABLE_N_MEMO[mn] = _reachable_n(mn)
+                sets.append(ns)
+            counts = np.array([len(s) for s in sets], dtype=np.int64)
+            flat_n = np.array([v for s in sets for v in s], dtype=np.float64)
+            starts = np.zeros(len(sets), dtype=np.int64)
+            np.cumsum(counts[:-1], out=starts[1:])
+            lay = self._nlayout[fp] = (flat_n, starts, counts)
+        return lay
+
+    def _tvec(self, lv: LayerVectors, s_eff: np.ndarray, flat_n: np.ndarray,
+              counts: np.ndarray) -> np.ndarray:
+        """Float t over every (layer, reachable N) pair — the same
+        ``(1 - s) * m_dot`` product then division the engines compute, so
+        equality here is equality of every t either engine can produce."""
+        om = np.repeat((1.0 - s_eff) * lv.m_dot, counts)
+        return np.maximum(1.0, np.ceil(om / flat_n))
+
+    def _lookup(self, fp: int, lv: LayerVectors, s_eff: np.ndarray,
+                key: bytes) -> Optional[DSEResult]:
+        """Exact/warm lookup for one query row; bumps counters and promotes
+        warm hits to exact entries. ``None`` means the caller runs cold."""
         exact = self._exact.setdefault(fp, {})
         r = exact.get(key)
         if r is not None:
             self.hits += 1
             return r
-        anchors = self._anchors.setdefault(fp, [[], [], [], []])
-        a_s, a_r11, a_th, a_res = anchors
-        if a_s:
-            q_r11 = self._rate11(lv)
-            S = np.stack(a_s)
-            R = np.stack(a_r11)
-            th = np.asarray(a_th)[:, None]
-            ok = (~(S != s_eff[None]) |
-                  ((R > th) & (q_r11[None] > th))).all(axis=1)
-            idx = np.nonzero(ok)[0]
-            if len(idx):
-                self.warm_hits += 1
-                r = a_res[int(idx[0])]
-                self._insert(fp, s_eff, key, q_r11, r)
+        anchors = self._anchors.setdefault(fp, [[], [], [], [], []])
+        a_s, a_r11, a_th, a_tv, a_res = anchors
+        if not a_s:
+            return None
+        q_r11 = self._rate11(lv)
+        S = np.stack(a_s)
+        R = np.stack(a_r11)
+        th = np.asarray(a_th)[:, None]
+        diff = S != s_eff[None]
+        l1 = (R > th) & (q_r11[None] > th)
+        need = diff & ~l1               # layers level 1 leaves unproven
+        n_need = need.sum(axis=1)
+        idx = np.nonzero(n_need == 0)[0]
+        if len(idx):
+            self.warm_l1 += 1
+            r = a_res[int(idx[0])]
+            self._insert(fp, lv, s_eff, key, r)
+            return r
+        # level 2: re-validate the unproven layers' dynamics by t-vector
+        # equality, cheapest anchors first, bounded candidate count
+        flat_n, starts, counts = self._layout(fp, lv)
+        q_tv = self._tvec(lv, s_eff, flat_n, counts)
+        for a in np.argsort(n_need, kind="stable")[:self._L2_CANDIDATES]:
+            a = int(a)
+            layer_ok = np.logical_and.reduceat(a_tv[a] == q_tv, starts)
+            if layer_ok[need[a]].all():
+                self.warm_l2 += 1
+                r = a_res[a]
+                self._insert(fp, lv, s_eff, key, r)
                 return r
+        return None
+
+    def dse_vec(self, lv: LayerVectors, hw: HardwareModel, budget: float,
+                *, max_iters: int = 10000, engine: str = "auto") -> DSEResult:
+        fp = self._fingerprint(lv, budget, max_iters)
+        s_eff = np.ascontiguousarray(lv.s_eff, dtype=np.float64)
+        key = s_eff.tobytes()
+        r = self._lookup(fp, lv, s_eff, key)
+        if r is not None:
+            return r
         self.cold_runs += 1
         spe, n, thr, res, trace, frontier, theta_r = _run_dse(
             lv, hw, budget, max_iters, engine)
@@ -862,8 +1444,97 @@ class DSECache:
         r = DSEResult(designs=designs, throughput=thr,
                       resource=res, throughput_per_res=thr / max(res, 1e-9),
                       trace=trace, frontier=frontier, theta_r=theta_r)
-        self._insert(fp, s_eff, key, self._rate11(lv), r)
+        self._insert(fp, lv, s_eff, key, r)
         return r
+
+    def dse_vec_batch(self, lv: LayerVectors, hw: HardwareModel,
+                      budget: float, s_eff_batch: np.ndarray,
+                      *, max_iters: int = 10000,
+                      engine: str = "auto") -> List[DSEResult]:
+        """Batched ``dse_vec``: row ``b`` of ``s_eff_batch`` is looked up
+        in row order (so within-batch duplicates alias the first
+        occurrence, as a serial loop would), and ALL cold rows then run
+        through ``incremental_dse_batch`` in one engine invocation — the
+        whole point of the proposal-batched path (DESIGN.md §15). Returns
+        per-row results bit-identical to ``[dse_vec(row b) for b]``
+        (certificate soundness + batch-engine exactness, property-tested).
+        ``engine`` here selects the BATCH backend
+        (``auto``/``compiled``/``lockstep``)."""
+        S = np.ascontiguousarray(np.asarray(s_eff_batch, dtype=np.float64))
+        B = S.shape[0]
+        out: List[Optional[DSEResult]] = [None] * B
+        if B == 0:
+            return []
+        fp = self._fingerprint(lv, budget, max_iters)
+        exact = self._exact.setdefault(fp, {})
+        anchors = self._anchors.setdefault(fp, [[], [], [], [], []])
+        a_s, a_r11, a_th, a_tv, a_res = anchors
+        # warm certificates for the WHOLE batch in one array program
+        # against the at-entry anchor snapshot (anchors promoted mid-batch
+        # aren't re-scanned; a row that would have certified against one
+        # just runs cold — same bits either way, by soundness)
+        A = len(a_s)
+        if A:
+            with np.errstate(divide="ignore"):
+                t11 = np.maximum(1.0, np.ceil((1.0 - S) * lv.m_dot))
+                R11 = lv.m_dot / (lv.macs * t11)
+            R11 = np.where(lv.macs > 0, R11, np.inf)      # (B, L)
+            th = np.asarray(a_th)[None, :, None]
+            diff = S[:, None, :] != np.stack(a_s)[None]   # (B, A, L)
+            l1 = (np.stack(a_r11)[None] > th) & (R11[:, None, :] > th)
+            n_need = (diff & ~l1).sum(axis=2)             # (B, A)
+        cold: List[int] = []            # row index of first cold occurrence
+        pending: Dict[bytes, int] = {}  # key -> index into ``cold``
+        dups: List[Tuple[int, int]] = []
+        for b in range(B):
+            key = S[b].tobytes()
+            r = exact.get(key)
+            if r is not None:
+                self.hits += 1
+                out[b] = r
+                continue
+            if A:
+                idx = np.nonzero(n_need[b] == 0)[0]
+                if len(idx):
+                    self.warm_l1 += 1
+                    r = a_res[int(idx[0])]
+                    self._insert(fp, lv, S[b], key, r, rate11=R11[b])
+                    out[b] = r
+                    continue
+                flat_n, starts, counts = self._layout(fp, lv)
+                q_tv = self._tvec(lv, S[b], flat_n, counts)
+                for a in np.argsort(n_need[b],
+                                    kind="stable")[:self._L2_CANDIDATES]:
+                    a = int(a)
+                    ok = np.logical_and.reduceat(a_tv[a] == q_tv, starts)
+                    if ok[diff[b, a] & ~l1[b, a]].all():
+                        self.warm_l2 += 1
+                        r = a_res[a]
+                        self._insert(fp, lv, S[b], key, r,
+                                     rate11=R11[b], tvec=q_tv)
+                        out[b] = r
+                        break
+                if out[b] is not None:
+                    continue
+            ci = pending.get(key)
+            if ci is not None:
+                self.hits += 1          # a serial loop would exact-hit here
+                dups.append((b, ci))
+                continue
+            pending[key] = len(cold)
+            cold.append(b)
+        if cold:
+            results = incremental_dse_batch(
+                lv, hw, budget, S[cold], max_iters=max_iters,
+                materialize_designs=self.materialize_designs, engine=engine)
+            for b, r in zip(cold, results):
+                self.cold_runs += 1
+                self._insert(fp, lv, S[b], S[b].tobytes(), r)
+            for b, r in zip(cold, results):
+                out[b] = r
+        for b, ci in dups:
+            out[b] = out[cold[ci]]
+        return out
 
     def dse(self, layers: Sequence[LayerCost], hw: HardwareModel,
             budget: float, *, max_iters: int = 10000,
@@ -872,17 +1543,28 @@ class DSECache:
         return self.dse_vec(hw.layer_vectors(layers), hw, budget,
                             max_iters=max_iters, engine=engine)
 
-    def _insert(self, fp: int, s_eff: np.ndarray, key: bytes,
-                rate11: np.ndarray, r: DSEResult) -> None:
+    def _insert(self, fp: int, lv: LayerVectors, s_eff: np.ndarray,
+                key: bytes, r: DSEResult,
+                rate11: Optional[np.ndarray] = None,
+                tvec: Optional[np.ndarray] = None) -> None:
+        """``rate11``/``tvec`` are computed from ``s_eff`` (NOT from
+        ``lv.s_eff`` — batch callers pass a template ``lv``) when a caller
+        hasn't already paid for them."""
         exact = self._exact[fp]
         if len(exact) >= self.max_entries:
             exact.clear()                    # epoch reset: searches are
-            self._anchors[fp] = [[], [], [], []]  # phase-local, old anchors
-        exact[key] = r                       # rarely pay off past the cap
-        a_s, a_r11, a_th, a_res = self._anchors[fp]
+            self._anchors[fp] = [[], [], [], [], []]  # phase-local, old
+        exact[key] = r                       # anchors rarely pay off past
+        a_s, a_r11, a_th, a_tv, a_res = self._anchors[fp]    # the cap
+        flat_n, starts, counts = self._layout(fp, lv)
+        if rate11 is None:
+            rate11 = self._rate11(replace(lv, s_eff=s_eff))
+        if tvec is None:
+            tvec = self._tvec(lv, s_eff, flat_n, counts)
         a_s.append(s_eff)
         a_r11.append(rate11)
         a_th.append(r.theta_r)
+        a_tv.append(tvec)
         a_res.append(r)
 
 

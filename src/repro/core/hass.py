@@ -282,6 +282,8 @@ class LMEvaluator:
     frontier_mode: str = "budgets"    # Eq. 6 frontier scoring (see
     budget_fracs: tuple = (0.25, 0.5, 0.75, 1.0)   # frontier_hw_metrics)
     dse_engine: str = "auto"      # greedy engine (flat pins seed behavior)
+    batch_dse: bool = True        # proposal-batched DSE in evaluate_batch
+    #                               (False pins the serial per-proposal loop)
 
     def __post_init__(self):
         if self.tie not in ("kind", "none"):
@@ -397,6 +399,12 @@ class LMEvaluator:
             dse = incremental_dse(layers, self.hw, self.budget,
                                   max_iters=self.dse_iters,
                                   engine=self.dse_engine)
+        return self._finish(sw, sa, dse)
+
+    def _finish(self, sw: np.ndarray, sa: np.ndarray, dse) -> Dict[str, float]:
+        """Realized sparsity + DSE result -> the Eq. 6 metric dict (shared
+        by the serial and the proposal-batched path, so both produce the
+        same floats by construction)."""
         # energy removed: tile pruning drops whole tiles (~uniform energy ->
         # fraction == sw); element pruning drops the smallest-|w| tail
         e_w = sw if self.tiled else \
@@ -411,10 +419,23 @@ class LMEvaluator:
                 **frontier_hw_metrics(self, dse.frontier)}
 
     def evaluate_batch(self, xs: Sequence[np.ndarray]) -> List[Dict[str, float]]:
-        """Analytic path: no forward pass to vmap, so a batch is a plain
-        loop — the hook exists so ``hass_search(batch_size=...)`` amortizes
-        TPE modeling cost over each batch identically to the CNN path."""
-        return [self(x) for x in xs]
+        """Proposal-batched path (DESIGN.md §15): realize every proposal's
+        ``s_eff`` row, then score the whole wave through
+        ``DSECache.dse_vec_batch`` — cache rows resolve in row order and
+        ALL cold rows advance in ONE batched-engine invocation instead of
+        k serial greedy runs. Bit-identical to ``[self(x) for x in xs]``
+        (batch-engine exactness + certificate soundness, property-tested).
+        A non-``auto`` ``dse_engine`` pins a specific serial engine, so it
+        keeps the plain loop."""
+        if len(xs) < 2 or not self.accel or not self.batch_dse \
+                or self.dse_engine != "auto":
+            return [self(x) for x in xs]
+        realized = [self._realize(x) for x in xs]
+        S = np.stack([s_eff for _, _, s_eff in realized])
+        dses = self.dse_cache.dse_vec_batch(self._lv0, self.hw, self.budget,
+                                            S, max_iters=self.dse_iters)
+        return [self._finish(sw, sa, dse)
+                for (sw, sa, _), dse in zip(realized, dses)]
 
 
 # --------------------------------------------------------------------- #
@@ -454,6 +475,7 @@ class CNNEvaluator:
     frontier_mode: str = "budgets"    # Eq. 6 frontier scoring (see
     budget_fracs: tuple = (0.25, 0.5, 0.75, 1.0)   # frontier_hw_metrics)
     dse_engine: str = "auto"    # greedy engine (flat pins seed behavior)
+    batch_dse: bool = True      # proposal-batched DSE in evaluate_batch
 
     def __post_init__(self):
         from repro.core.perf_model import cnn_layer_costs
@@ -608,6 +630,26 @@ class CNNEvaluator:
         return {"acc": acc, "spa": spa,
                 **frontier_hw_metrics(self, dse.frontier)}
 
+    def _metrics_batch(self, accs: np.ndarray, sw_meas: np.ndarray,
+                       sa_meas: np.ndarray,
+                       swt_meas: Optional[np.ndarray]) -> List[Dict[str, float]]:
+        """Batched ``_metrics`` tail: one ``dse_vec_batch`` call scores all
+        measured-sparsity rows (the workload constants are per-layer dense
+        facts — identical across rows — so one ``LayerVectors`` template +
+        the stacked ``s_eff`` rows is the whole batch state). Bit-identical
+        to the per-row ``_metrics`` loop (property-tested)."""
+        B = len(accs)
+        rows = [self._sparse_layers(sw_meas[b], sa_meas[b],
+                                    swt_meas[b] if swt_meas is not None
+                                    else None) for b in range(B)]
+        lvs = [self.hw.layer_vectors(layers) for layers, _ in rows]
+        S = np.stack([lv.s_eff for lv in lvs])
+        dses = self.dse_cache.dse_vec_batch(lvs[0], self.hw, self.budget, S,
+                                            max_iters=self.dse_iters)
+        return [{"acc": float(accs[b]), "spa": rows[b][1],
+                 **frontier_hw_metrics(self, dses[b].frontier)}
+                for b in range(B)]
+
     def __call__(self, x: np.ndarray) -> Dict[str, float]:
         # 1-2) one-shot prune + accuracy proxy + measured act sparsity (jitted)
         s_w, s_a = self._split(x)
@@ -648,6 +690,10 @@ class CNNEvaluator:
         self.batch_shapes.add(int(s_w.shape[0]))
         accs, sw_meas, sa_meas, swt_meas = map(
             np.asarray, self._eval_batch(self.params, s_w, s_a))
+        if B > 1 and self.dse_cache is not None and self.batch_dse \
+                and self.dse_engine == "auto":
+            return self._metrics_batch(accs[:B], sw_meas[:B], sa_meas[:B],
+                                       swt_meas[:B] if self.tiled else None)
         return [self._metrics(float(accs[b]), sw_meas[b], sa_meas[b],
                               swt_meas[b] if self.tiled else None)
                 for b in range(B)]

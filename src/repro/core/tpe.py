@@ -92,8 +92,21 @@ class TPE:
         if liar is None or k <= 1 or not self.ys:
             if len(self.xs) < self.n_startup:
                 return [self._rng.uniform(self.lo, self.hi) for _ in range(k)]
-            fit = self._fit()
-            return [self._propose(fit) for _ in range(k)]
+            # one array program per wave (DESIGN.md §15): candidates are
+            # drawn member by member (identical RNG stream to k serial
+            # ``_propose`` calls) but all k * n_ei are SCORED in one KDE
+            # evaluation — ``_log_kde`` reduces strictly per row, so each
+            # member's winner is bit-identical to its serial pick, and a
+            # ragged tail round (k < batch_size, n_trials not a multiple of
+            # batch_size) truncates to exactly k members with the RNG
+            # position k serial asks would leave
+            good, bw_good, bad, bw_bad = self._fit()
+            cands = [self._sample_parzen(good, bw_good, self.n_ei)
+                     for _ in range(k)]
+            allc = np.concatenate(cands)
+            score = (self._log_kde(allc, good, bw_good) -
+                     self._log_kde(allc, bad, bw_bad)).reshape(k, self.n_ei)
+            return [cands[i][int(np.argmax(score[i]))] for i in range(k)]
         lie = {"min": min(self.ys), "mean": float(np.mean(self.ys)),
                "max": max(self.ys)}[liar]
         real_xs, real_ys = self.xs, self.ys

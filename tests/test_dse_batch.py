@@ -1,0 +1,219 @@
+"""Proposal-batched DSE correctness (DESIGN.md §15).
+
+The batched path's whole contract is BIT-exactness at every layer of the
+stack: ``incremental_dse_batch`` (compiled C kernel AND numpy lockstep
+backend) must reproduce the serial engine's result row for row,
+``DSECache.dse_vec_batch`` must equal a serial ``dse_vec`` loop, and
+``LMEvaluator.evaluate_batch`` / ``hass_search(batch_size=k)`` must replay
+the serial trial sequence float for float. These tests fuzz all of it with
+kind-tied stacks, tight-budget reverts, truncated iteration caps, and the
+non-divisible ``n_trials``/``batch_size`` tail round.
+"""
+import numpy as np
+import pytest
+
+import repro.core.dse as dse_mod
+from repro.core import _dse_ckernel
+from repro.core.dse import DSECache, incremental_dse, incremental_dse_batch
+from repro.core.perf_model import FPGAModel, LayerCost
+from repro.core.tpe import TPE
+
+HW = FPGAModel()
+
+# the lockstep backend always exists; the compiled backend needs a C
+# compiler in the environment (it is the `auto` choice when present)
+ENGINES = ["lockstep"] + \
+    (["compiled"] if _dse_ckernel.get_lib() is not None else [])
+
+
+def kind_tied_stack(seed: int, n_blocks: int = 10):
+    rng = np.random.default_rng(seed)
+    kinds = [("wq", 64, 64), ("wkv", 64, 32), ("ffn", 64, 256),
+             ("tiny", 8, 4)]
+    s_of = {k: float(rng.uniform(0.0, 0.8)) for k, _, _ in kinds}
+    layers = []
+    for b in range(n_blocks):
+        for k, m, c in kinds:
+            layers.append(LayerCost(
+                name=f"l{b}.{k}", macs=m * c, m_dot=m, weight_count=m * c,
+                act_in=m, act_out=c, s_w=s_of[k]))
+        layers.append(LayerCost(name=f"l{b}.attn", macs=2 * 64 * 16,
+                                m_dot=16, weight_count=0, act_in=64,
+                                act_out=64, kind="attn", prunable=False))
+    return layers
+
+
+def random_rows(lv, layers, rng, B):
+    """B random s_eff rows over the stack's prunable layers (FPGA pair
+    sparsity with s_a=0 means s_eff == s_w, so rows are direct)."""
+    prunable = np.array([l.prunable for l in layers])
+    rows = np.tile(lv.s_eff, (B, 1))
+    rows[:, prunable] = rng.uniform(0.0, 0.9, (B, int(prunable.sum())))
+    return rows
+
+
+def assert_result_equal(r, c, tag=""):
+    assert [(d.spe, d.macs_per_spe) for d in r.designs] == \
+        [(d.spe, d.macs_per_spe) for d in c.designs], tag
+    assert r.throughput == c.throughput, tag
+    assert r.resource == c.resource, tag
+    assert r.theta_r == c.theta_r, tag
+    assert r.trace == c.trace, tag
+    fr, fc = r.frontier, c.frontier
+    assert np.array_equal(fr.res, fc.res) and \
+        np.array_equal(fr.thr, fc.thr), tag
+    assert np.array_equal(fr.spe, fc.spe) and \
+        np.array_equal(fr.n, fc.n), tag
+
+
+# --------------------------------------------------------------------- #
+# incremental_dse_batch == serial engine, both backends
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("seed", range(4))
+def test_batch_rows_match_serial(engine, seed):
+    layers = kind_tied_stack(seed)
+    lv = HW.layer_vectors(layers)
+    rng = np.random.default_rng(100 + seed)
+    rows = random_rows(lv, layers, rng, 5)
+    floor = float(lv.res_unit.sum())
+    for budget, iters in ((4096.0, 300), (512.0, 300),
+                          (floor * 1.05, 200),   # near-floor: budget reverts
+                          (4096.0, 7)):          # truncated iteration cap
+        batch = incremental_dse_batch(lv, HW, budget, rows,
+                                      max_iters=iters, engine=engine)
+        for b in range(len(rows)):
+            row_layers = [
+                LayerCost(**{**l.__dict__, "s_w": float(rows[b][i])})
+                if l.prunable else l for i, l in enumerate(layers)]
+            cold = incremental_dse(row_layers, HW, budget, max_iters=iters)
+            assert_result_equal(batch[b], cold,
+                                f"engine={engine} b={b} budget={budget}")
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batch_single_row_and_materialize_off(engine):
+    layers = kind_tied_stack(11)
+    lv = HW.layer_vectors(layers)
+    rows = random_rows(lv, layers, np.random.default_rng(11), 1)
+    r = incremental_dse_batch(lv, HW, 2048.0, rows, max_iters=200,
+                              engine=engine)
+    assert len(r) == 1
+    lean = incremental_dse_batch(lv, HW, 2048.0, rows, max_iters=200,
+                                 engine=engine, materialize_designs=False)[0]
+    assert lean.designs == []
+    assert lean.throughput == r[0].throughput
+    assert np.array_equal(lean.frontier.spe, r[0].frontier.spe)
+
+
+def test_batch_engine_dispatch(monkeypatch):
+    layers = kind_tied_stack(12)
+    lv = HW.layer_vectors(layers)
+    rows = random_rows(lv, layers, np.random.default_rng(12), 2)
+    with pytest.raises(ValueError):
+        incremental_dse_batch(lv, HW, 2048.0, rows, engine="nope")
+    # no compiler available: auto falls back to lockstep, compiled raises
+    monkeypatch.setattr(dse_mod._dse_ckernel, "get_lib", lambda: None)
+    auto = incremental_dse_batch(lv, HW, 2048.0, rows, max_iters=150,
+                                 engine="auto")
+    lock = incremental_dse_batch(lv, HW, 2048.0, rows, max_iters=150,
+                                 engine="lockstep")
+    for a, b in zip(auto, lock):
+        assert_result_equal(a, b)
+    with pytest.raises(RuntimeError):
+        incremental_dse_batch(lv, HW, 2048.0, rows, engine="compiled")
+
+
+# --------------------------------------------------------------------- #
+# DSECache.dse_vec_batch == serial dse_vec loop
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(3))
+def test_dse_vec_batch_matches_serial_loop(seed):
+    from dataclasses import replace
+    layers = kind_tied_stack(20 + seed)
+    lv = HW.layer_vectors(layers)
+    rng = np.random.default_rng(20 + seed)
+    rows = random_rows(lv, layers, rng, 6)
+    rows[3] = rows[0]                       # within-batch duplicate
+    serial_cache, batch_cache = DSECache(), DSECache()
+    serial = [serial_cache.dse_vec(replace(lv, s_eff=rows[b]), HW, 2048.0,
+                                   max_iters=200) for b in range(len(rows))]
+    batch = batch_cache.dse_vec_batch(lv, HW, 2048.0, rows, max_iters=200)
+    for s, r in zip(serial, batch):
+        assert_result_equal(s, r)
+    assert batch[3] is batch[0]             # duplicates alias, like serial
+    assert batch_cache.stats()["hits"] >= 1
+    # a second identical batch is all exact hits, zero cold runs
+    cold0 = batch_cache.stats()["cold_runs"]
+    again = batch_cache.dse_vec_batch(lv, HW, 2048.0, rows, max_iters=200)
+    assert all(a is b for a, b in zip(again, batch))
+    assert batch_cache.stats()["cold_runs"] == cold0
+
+
+def test_dse_vec_batch_empty():
+    lv = HW.layer_vectors(kind_tied_stack(30))
+    assert DSECache().dse_vec_batch(lv, HW, 2048.0,
+                                    np.empty((0, len(lv)))) == []
+
+
+# --------------------------------------------------------------------- #
+# TPE RNG stream position: ask_batch(k) == k asks, incl. truncated tail
+# --------------------------------------------------------------------- #
+def test_ask_batch_rng_position_matches_serial_protocol():
+    lo, hi = np.zeros(3), np.ones(3)
+    seeds = np.random.default_rng(7).uniform(0, 1, (12, 3))
+    a, b = TPE(lo=lo, hi=hi, seed=5), TPE(lo=lo, hi=hi, seed=5)
+    for x in seeds:
+        a.tell(x, float(x.sum()))
+        b.tell(x, float(x.sum()))
+    # a truncated tail round: ask_batch(2) must consume exactly as much
+    # RNG as two serial asks, whichever liar protocol ran
+    xs_a = a.ask_batch(2, liar="min")
+    xs_b = [b.ask() for _ in range(2)]
+    assert np.array_equal(xs_a[0], xs_b[0])   # first member == plain ask
+    for x in xs_a:                  # tell BOTH sides the same observations,
+        a.tell(x, 0.0)              # so the next proposal differs only if
+        b.tell(x, 0.0)              # the RNG streams diverged
+    assert np.array_equal(a.ask(), b.ask())
+
+
+# --------------------------------------------------------------------- #
+# hass_search: non-divisible n_trials / batch_size regression
+# --------------------------------------------------------------------- #
+def test_hass_search_non_divisible_batch_runs_exact_trial_count():
+    from repro.core.hass import LMEvaluator, hass_search
+    from repro.core.perf_model import TPUModel
+    from repro.configs import get_config
+
+    cfg = get_config("qwen3-0.6b")
+    hw = TPUModel(chips=1)
+    ev_batch = LMEvaluator(cfg, hw, hw.budget, dse_iters=200)
+    ev_serial = LMEvaluator(cfg, hw, hw.budget, dse_iters=200,
+                            dse_engine="flat")     # pins the serial loop
+    kw = dict(iters=10, liar=None, seed=9, include_act=False)
+    r_b = hass_search(ev_batch, ev_batch.n_search, batch_size=4, **kw)
+    r_s = hass_search(ev_serial, ev_serial.n_search, batch_size=4, **kw)
+    # exactly n_trials trials despite 10 % 4 != 0, and the batched
+    # evaluator path replays the serial-engine transcript bit for bit
+    assert len(r_b.trials) == len(r_s.trials) == 10
+    for t_b, t_s in zip(r_b.trials, r_s.trials):
+        assert np.array_equal(t_b.x, t_s.x)
+        assert t_b.score == t_s.score
+        assert t_b.metrics == t_s.metrics
+    assert r_b.best_score == r_s.best_score
+    assert np.array_equal(r_b.best_x, r_s.best_x)
+
+
+def test_lm_evaluate_batch_bit_exact_vs_serial_calls():
+    from repro.core.hass import LMEvaluator
+    from repro.core.perf_model import TPUModel
+    from repro.configs import get_config
+
+    cfg = get_config("qwen3-0.6b")
+    hw = TPUModel(chips=1)
+    ev_a = LMEvaluator(cfg, hw, hw.budget, dse_iters=200)
+    ev_b = LMEvaluator(cfg, hw, hw.budget, dse_iters=200)
+    rng = np.random.default_rng(3)
+    xs = [rng.uniform(0, 0.9, ev_a.n_search) for _ in range(5)]
+    assert [ev_a(x) for x in xs] == ev_b.evaluate_batch(xs)
+    assert ev_b.dse_cache.stats()["cold_runs"] <= 5

@@ -122,7 +122,8 @@ def test_exact_memo_returns_shared_result():
     r1 = cache.dse(layers, HW, 2048.0, max_iters=200)
     r2 = cache.dse(layers, HW, 2048.0, max_iters=200)
     assert r1 is r2
-    assert cache.stats() == {"hits": 1, "warm_hits": 0, "cold_runs": 1}
+    assert cache.stats() == {"hits": 1, "warm_hits": 0, "warm_l1": 0,
+                             "warm_l2": 0, "cold_runs": 1}
     # a different budget is a different key
     cache.dse(layers, HW, 1024.0, max_iters=200)
     assert cache.stats()["cold_runs"] == 2
@@ -258,4 +259,128 @@ def test_segment_table_cache_counts_fills_not_cold_runs():
     t2 = SegmentTable(layers, HW, 1024.0, 32, 150, cache=cache)
     t2.frontier(0, 5)
     assert t1.dse_calls == 1 and t2.dse_calls == 1
-    assert cache.stats() == {"hits": 1, "warm_hits": 0, "cold_runs": 1}
+    assert cache.stats() == {"hits": 1, "warm_hits": 0, "warm_l1": 0,
+                             "warm_l2": 0, "cold_runs": 1}
+
+
+# --------------------------------------------------------------------- #
+# Warm-start level 2: dynamics-equivalence certificate (DESIGN.md §15)
+# --------------------------------------------------------------------- #
+def _cnn_stack(seed):
+    from repro.configs.paper_cnns import RESNET18
+    from repro.core.perf_model import cnn_layer_costs
+    rng = np.random.default_rng(seed)
+    layers = cnn_layer_costs(RESNET18)[:14]
+    for l in layers:
+        if l.prunable:
+            l.s_w = float(rng.uniform(0.1, 0.7))
+    return layers
+
+
+def _l2_perturbation(lv, li, eps_list=(1e-13, 1e-12, 1e-11)):
+    """A sparsity delta on layer ``li`` that moves the float but keeps the
+    t-vector over the reachable-N closure equal (the level-2 condition),
+    or None if none of the candidate epsilons lands inside a ceil window."""
+    from repro.core.dse import _reachable_n
+    ns = np.array(_reachable_n(int(lv.max_n[li])), dtype=np.float64)
+    md = float(lv.m_dot[li])
+
+    def tv(s):
+        return np.maximum(1.0, np.ceil((1.0 - s) * md / ns))
+
+    s0 = float(lv.s_eff[li])
+    for eps in eps_list:
+        s1 = s0 + eps
+        if s1 != s0 and s1 < 1.0 and np.array_equal(tv(s0), tv(s1)):
+            return s1
+    return None
+
+
+@pytest.mark.parametrize("stack", ["lm", "cnn"])
+@pytest.mark.parametrize("seed", range(3))
+def test_warm_l2_fuzz_cold_vs_warm_bit_exact(stack, seed):
+    """Fuzz the level-2 certificate over grown (floor-adjacent) layers:
+    a t-vector-preserving sparsity delta on a layer the anchor run GREW
+    (level 1 can never cover it) must warm-hit at level 2 and equal a
+    fresh cold run bit for bit."""
+    from dataclasses import replace
+    layers = kind_tied_stack(40 + seed) if stack == "lm" \
+        else _cnn_stack(40 + seed)
+    lv = HW.layer_vectors(layers)
+    cache = DSECache()
+    r0 = cache.dse_vec(lv, HW, 2048.0, max_iters=250)
+    spe = np.array([d.spe for d in r0.designs])
+    n = np.array([d.macs_per_spe for d in r0.designs])
+    grown = np.nonzero((spe * n > 1) & (lv.s_eff > 0))[0]
+    assert len(grown), "anchor run grew nothing — stack too small"
+    l2_hits = 0
+    for li in grown[:4].tolist():
+        s1 = _l2_perturbation(lv, li)
+        if s1 is None:
+            continue
+        s_eff = lv.s_eff.copy()
+        s_eff[li] = s1
+        before = dict(cache.stats())
+        r = cache.dse_vec(replace(lv, s_eff=s_eff), HW, 2048.0,
+                          max_iters=250)
+        after = cache.stats()
+        assert after["warm_l2"] == before["warm_l2"] + 1
+        cold = DSECache().dse_vec(replace(lv, s_eff=s_eff), HW, 2048.0,
+                                  max_iters=250)
+        assert r.throughput == cold.throughput
+        assert r.resource == cold.resource
+        assert r.theta_r == cold.theta_r
+        assert r.trace == cold.trace
+        assert np.array_equal(r.frontier.res, cold.frontier.res)
+        assert np.array_equal(r.frontier.thr, cold.frontier.thr)
+        assert np.array_equal(r.frontier.spe, cold.frontier.spe)
+        l2_hits += 1
+    assert l2_hits >= 1, "no level-2 certifiable perturbation found"
+
+
+@pytest.mark.parametrize("stack", ["lm", "cnn"])
+def test_warm_l2_invalidation_falls_back_cold(stack):
+    """A delta on a grown layer that CHANGES its t-vector must invalidate
+    both certificates, fall back to a cold run, and still be exact."""
+    from dataclasses import replace
+    layers = kind_tied_stack(50) if stack == "lm" else _cnn_stack(50)
+    lv = HW.layer_vectors(layers)
+    cache = DSECache()
+    r0 = cache.dse_vec(lv, HW, 2048.0, max_iters=250)
+    spe = np.array([d.spe for d in r0.designs])
+    n = np.array([d.macs_per_spe for d in r0.designs])
+    li = int(np.nonzero((spe * n > 1) & (lv.s_eff > 0))[0][0])
+    s_eff = lv.s_eff.copy()
+    s_eff[li] = min(0.95, s_eff[li] + 0.07)   # crosses ceil boundaries
+    before = dict(cache.stats())
+    r = cache.dse_vec(replace(lv, s_eff=s_eff), HW, 2048.0, max_iters=250)
+    after = cache.stats()
+    assert after["cold_runs"] == before["cold_runs"] + 1
+    assert after["warm_l1"] == before["warm_l1"]
+    assert after["warm_l2"] == before["warm_l2"]
+    cold = DSECache().dse_vec(replace(lv, s_eff=s_eff), HW, 2048.0,
+                              max_iters=250)
+    assert r.trace == cold.trace and r.throughput == cold.throughput
+
+
+def test_stats_counters_are_consistent():
+    """warm_hits is the back-compat aggregate of the two levels, and every
+    query lands in exactly one counter bucket."""
+    from dataclasses import replace
+    layers = kind_tied_stack(60)
+    lv = HW.layer_vectors(layers)
+    cache = DSECache()
+    rng = np.random.default_rng(60)
+    queries = 12
+    for q in range(queries):
+        s_eff = lv.s_eff.copy()
+        if q % 3 == 1:                      # floor-stable delta (level 1)
+            tiny = [i for i, l in enumerate(layers)
+                    if l.name.endswith(".tiny")]
+            s_eff[tiny] = float(rng.uniform(0, 0.8))
+        elif q % 3 == 2:                    # random delta (usually cold)
+            s_eff[1] = float(rng.uniform(0, 0.9))
+        cache.dse_vec(replace(lv, s_eff=s_eff), HW, 2048.0, max_iters=200)
+    st = cache.stats()
+    assert st["warm_hits"] == st["warm_l1"] + st["warm_l2"]
+    assert st["hits"] + st["warm_hits"] + st["cold_runs"] == queries
