@@ -19,7 +19,7 @@ def main() -> None:
                     help="paper-budget searches (96 TPE iters)")
     ap.add_argument("--only", default=None,
                     help="comma list: kernels,fig4,fig6,fig5,fig1,table2,"
-                         "roofline,dse,lm_dse,search,sim,fleet")
+                         "roofline,dse,lm_dse,search,sim,fleet,sparsity")
     args = ap.parse_args()
     iters = 96 if args.full else 10
     t2_iters = 24 if args.full else 8
@@ -28,7 +28,8 @@ def main() -> None:
     from benchmarks import (dse_bench, fig1_frontier, fig4_dse_allocation,
                             fig5_search_compare, fig6_speedup, fleet_bench,
                             kernels_bench, lm_dse_bench, roofline_report,
-                            search_bench, sim_bench, table2_models)
+                            search_bench, sim_bench, sparsity_bench,
+                            table2_models)
     jobs = [
         ("kernels", lambda: kernels_bench.run()),
         ("fig4", lambda: fig4_dse_allocation.run()),
@@ -43,6 +44,7 @@ def main() -> None:
         ("search", lambda: search_bench.run(smoke=smoke)),
         ("sim", lambda: sim_bench.run(smoke=smoke)),
         ("fleet", lambda: fleet_bench.run(smoke=smoke)),
+        ("sparsity", lambda: sparsity_bench.run(smoke=smoke)),
     ]
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

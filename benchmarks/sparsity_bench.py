@@ -1,0 +1,330 @@
+"""Sparsity-pattern design-axis gate (DESIGN.md §16).
+
+Four sections, saved to ``experiments/sparsity_bench.json``:
+
+  * ``kernel_costs`` — the seeded per-pattern decode microbench
+    (``kernels.kernel_costs``), cached to ``experiments/kernel_costs.json``
+    (byte-deterministic; re-running must not dirty the checked-in file),
+    condensed to per-pattern decode factors c_p >= 1.
+  * ``default_identity`` — HARD GATE: ``hass_search`` with the degenerate
+    pattern axis (``patterns=("unstructured",)``) replays the pre-pattern
+    (``patterns=None``) transcript trial-for-trial bit-identically on a CNN
+    (FPGA) and a kind-tied LM (TPU) evaluator, serial AND batched.
+  * ``pattern_win`` — HARD GATE: on a TPU CNN stack and a kind-tied TPU LM
+    stack, the pattern-aware search (unstructured / N:M / hierarchical /
+    activation as tied categorical TPE variables) finds a trial that
+    PARETO-DOMINATES the unstructured-only arm: at its own accuracy proxy
+    ``a`` (above a per-stack floor), its modeled hardware score
+    (λthr·thr_norm − λdsp·dsp) strictly beats EVERY unstructured trial with
+    accuracy >= ``a``. Both arms are anchored with a dense ``x0`` trial, so
+    the comparison always includes the honest "don't prune at all" point
+    and can never go vacuous. The mechanism: the MXU only skips whole
+    tiles, so unstructured pruning pays accuracy linearly in the tile
+    fraction, while N:M / hierarchical keep the largest magnitudes per
+    group AND count element-granular effective sparsity in Eq. 1. The win
+    is on MODELED costs (the paper's dataflow assumption: element-granular
+    skipping is native); the CPU-measured decode factors are far more
+    punitive than real sparse datapaths (~2.2x for N:M gather) and are
+    gated separately below.
+  * ``meas_term`` — HARD GATE: with measured decode factors installed
+    (``pattern_costs``), every pattern-arm trial reports the Eq. 6 ``meas``
+    term, the recorded score subtracts ``lambdas.meas * meas`` exactly, and
+    an all-N:M assignment prices strictly above an all-unstructured one.
+  * ``executed`` — HARD GATE: the winning assignment's dominant pattern is
+    realized on a real weight, its tile schedule built, and the schedule
+    EXECUTED through the ``block_sparse_matmul`` Pallas kernel (interpret
+    mode) against the dense jnp reference.
+
+    PYTHONPATH=src:. python benchmarks/sparsity_bench.py [--smoke]
+"""
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, emit, save_json, trained_cnn
+from repro.configs import get_config, reduce_config
+from repro.configs.paper_cnns import RESNET18
+from repro.core import pruning
+from repro.core.hass import CNNEvaluator, Lambdas, LMEvaluator, hass_search
+from repro.core.perf_model import FPGAModel, TPUModel
+from repro.kernels import kernel_costs
+
+PATTERNS = pruning.PATTERNS
+COSTS_PATH = os.path.join(RESULTS_DIR, "kernel_costs.json")
+
+
+def bench_kernel_costs():
+    table = kernel_costs.load_or_measure(COSTS_PATH)
+    # determinism: a fresh in-memory measurement reproduces the cached table
+    again = kernel_costs.measure(
+        kernel_costs.MicrobenchConfig(**{
+            k: tuple(v) if isinstance(v, list) else v
+            for k, v in table["config"].items() if k != "schema"}))
+    assert again == table, "kernel cost microbench is not deterministic"
+    factors = table["decode_factors"]
+    assert set(factors) == set(PATTERNS)
+    assert all(v >= 1.0 for v in factors.values())
+    for p in PATTERNS:
+        print(f"  decode_factor[{p:13s}] = {factors[p]:.4f} ")
+    return {"factors": factors, "dense_mode": table["dense"]["mode"],
+            "path": os.path.relpath(COSTS_PATH,
+                                    os.path.join(RESULTS_DIR, ".."))}
+
+
+def _assert_identical(r0, r1, tag):
+    assert len(r0.trials) == len(r1.trials), tag
+    for t0, t1 in zip(r0.trials, r1.trials):
+        assert np.array_equal(t0.x, t1.x), tag
+        assert t0.metrics == t1.metrics, tag
+        assert t0.score == t1.score, tag
+    assert r0.best_score == r1.best_score, tag
+
+
+def bench_default_identity(cnn_pack, iters):
+    rows = []
+    cfg, params, images = cnn_pack
+    base = CNNEvaluator(cfg, params, images, FPGAModel(), budget=4096,
+                        dse_iters=150)
+    pat = CNNEvaluator(cfg, params, images, FPGAModel(), budget=4096,
+                       dse_iters=150, patterns=("unstructured",))
+    kw = dict(iters=iters, s_max=0.9, seed=0)
+    _assert_identical(hass_search(base, len(base.prunable), **kw),
+                      hass_search(pat, len(pat.prunable), **kw), "cnn/serial")
+    rows.append({"stack": "cnn-fpga", "mode": "serial", "iters": iters,
+                 "identical": True})
+    print(f"  cnn-fpga   serial   {iters} trials bit-identical")
+
+    lm_cfg = get_config("qwen3-0.6b")
+    tpu = TPUModel(chips=1)
+    for mode, bs in (("serial", None), ("batched", 4)):
+        b = LMEvaluator(lm_cfg, tpu, tpu.budget, dse_iters=150)
+        p = LMEvaluator(lm_cfg, tpu, tpu.budget, dse_iters=150,
+                        patterns=("unstructured",))
+        kw = dict(iters=2 * iters, seed=0, include_act=False, batch_size=bs)
+        _assert_identical(hass_search(b, b.n_search, **kw),
+                          hass_search(p, p.n_search, **kw), f"lm/{mode}")
+        rows.append({"stack": "lm-tpu", "mode": mode, "iters": 2 * iters,
+                     "identical": True})
+        print(f"  lm-tpu     {mode:8s} {2 * iters} trials bit-identical")
+    return rows
+
+
+def _hw_score(m, lam):
+    return lam.thr * m["thr_norm"] - lam.dsp * m["dsp"]
+
+
+def _win_row(stack, r_u, r_p, lam, floor, n_pat):
+    """The gate comparison: Pareto dominance at equal-or-better accuracy.
+    A pattern trial at accuracy ``a >= floor`` wins if its modeled hw score
+    strictly beats EVERY unstructured trial with accuracy >= ``a``. Both
+    arms carry a dense ``x0`` anchor (acc == max), so the unstructured
+    competitor set is never empty. Reported: the max-gain dominating
+    trial."""
+    wins = []
+    for t in r_p.trials:
+        a = t.metrics["acc"]
+        if a < floor:
+            continue
+        hw_u = max(_hw_score(u.metrics, lam) for u in r_u.trials
+                   if u.metrics["acc"] >= a)
+        hw_p = _hw_score(t.metrics, lam)
+        if hw_p > hw_u:
+            wins.append((hw_p - hw_u, a, hw_p, hw_u, t))
+    assert wins, \
+        f"{stack}: no pattern trial with acc >= {floor} strictly beats " \
+        f"the unstructured arm's hw score at equal-or-better accuracy"
+    gain, acc, hw_p, hw_u, best = max(wins, key=lambda w: w[0])
+    # a genuine pattern win, not an unstructured config the other arm's TPE
+    # happened to miss: the dominating trial assigns a non-default pattern
+    codes = np.clip(best.x[-n_pat:].astype(np.int64), 0, len(PATTERNS) - 1)
+    assert (codes != 0).any(), f"{stack}: dominating trial is all-unstructured"
+    print(f"  {stack:10s} {len(wins)} dominating trials; best at "
+          f"acc={acc:.3f}  hw: unstructured={hw_u:.4f}  pattern={hw_p:.4f}"
+          f"  (+{gain:.4f})")
+    return {"stack": stack, "acc": acc, "acc_floor": floor,
+            "n_dominating": len(wins), "hw_unstructured": hw_u,
+            "hw_pattern": hw_p, "gain": gain}, best
+
+
+def bench_pattern_win(cnn_pack, iters_cnn, iters_lm):
+    lam = Lambdas()
+    rows, winners = [], {}
+
+    cfg, params, images = cnn_pack
+    tpu = TPUModel()
+    ev_u = CNNEvaluator(cfg, params, images, tpu, budget=tpu.chip_budget,
+                        dse_iters=150)
+    ev_p = CNNEvaluator(cfg, params, images, tpu, budget=tpu.chip_budget,
+                        dse_iters=150, patterns=PATTERNS)
+    L = len(ev_p.prunable)
+    kw = dict(iters=iters_cnn, s_max=0.6, seed=0, lambdas=lam, batch_size=8)
+    r_u = hass_search(ev_u, L, **kw, x0=np.zeros(2 * L))
+    r_p = hass_search(ev_p, L, **kw, x0=np.zeros(3 * L))
+    row, best = _win_row("cnn-tpu", r_u, r_p, lam, floor=0.4, n_pat=L)
+    rows.append(row)
+    winners["cnn"] = (ev_p, best, L)
+
+    lm_cfg = get_config("qwen3-0.6b")
+    lm_u = LMEvaluator(lm_cfg, tpu, tpu.chip_budget, dse_iters=150)
+    lm_p = LMEvaluator(lm_cfg, tpu, tpu.chip_budget, dse_iters=150,
+                       patterns=PATTERNS)
+    assert lm_p.tie == "kind" and lm_p.n_pattern_dims == lm_p.n_search
+    n = lm_p.n_search
+    kw = dict(iters=iters_lm, seed=0, include_act=False, lambdas=lam,
+              s_max=0.6)
+    r_u = hass_search(lm_u, n, **kw, x0=np.zeros(n))
+    r_p = hass_search(lm_p, n, **kw, x0=np.zeros(2 * n))
+    row, best = _win_row("lm-tpu", r_u, r_p, lam, floor=0.6, n_pat=n)
+    rows.append(row)
+    winners["lm"] = (lm_p, best, n)
+    return rows, winners
+
+
+def bench_meas_term(factors):
+    """The measured decode factors feed Eq. 6: with ``pattern_costs``
+    installed every trial reports ``meas``, the recorded score subtracts
+    ``lambdas.meas * meas`` exactly, and pricing is pattern-sensitive."""
+    lam = Lambdas(meas=0.1)
+    tpu = TPUModel()
+    ev = LMEvaluator(get_config("qwen3-0.6b"), tpu, tpu.chip_budget,
+                     dse_iters=150, patterns=PATTERNS, pattern_costs=factors)
+    n = ev.n_search
+    r = hass_search(ev, n, iters=16, seed=0, include_act=False, lambdas=lam)
+    for t in r.trials:
+        m = t.metrics
+        assert "meas" in m
+        want = m["acc"] + lam.spa * m["spa"] + lam.thr * m["thr_norm"] \
+            - lam.dsp * m["dsp"] - lam.meas * m["meas"]
+        assert abs(want - t.score) < 1e-12
+    s = np.full(n, 0.5)
+    meas_u = ev(np.concatenate([s, np.full(n, 0.5)]))["meas"]
+    meas_nm = ev(np.concatenate([s, np.full(n, 1.5)]))["meas"]
+    assert meas_nm > meas_u, \
+        f"all-N:M must price above all-unstructured ({meas_nm} <= {meas_u})"
+    print(f"  meas wired into Eq. 6 over {len(r.trials)} trials; "
+          f"all-nm prices {meas_nm:.3f} > all-unstructured {meas_u:.3f}")
+    return {"trials": len(r.trials), "meas_unstructured": meas_u,
+            "meas_nm": meas_nm, "lambda_meas": lam.meas}
+
+
+def _dominant_pattern(ev, best, n):
+    """(pattern name, sparsity target) of the winner's largest prunable
+    weight share among NON-DEFAULT pattern assignments (the win is
+    attributable to those — `_win_row` guarantees at least one exists;
+    executing the default unstructured schedule would gate nothing new)."""
+    codes = np.clip(best.x[-n:].astype(np.int64), 0, len(ev.patterns) - 1)
+    s_w = np.clip(best.x[:n], 0.0, 1.0)
+    if hasattr(ev, "_group"):                      # LM: kind-tied
+        g = np.asarray(ev._group)
+        per_layer = codes[g]
+        share = {}
+        for c in range(1, len(ev.patterns)):
+            share[c] = float(ev._wfrac[per_layer == c].sum())
+        c_dom = max(share, key=share.get)
+        ks = [k for k in range(n) if codes[k] == c_dom]
+        s = float(np.mean(s_w[ks])) if ks else float(s_w.mean())
+    else:                                          # CNN: per-layer codes
+        wc = np.array([l.weight_count for l in ev.prunable], np.float64)
+        share = {}
+        for c in range(1, len(ev.patterns)):
+            share[c] = float(wc[codes == c].sum())
+        c_dom = max(share, key=share.get)
+        ks = np.flatnonzero(codes == c_dom)
+        s = float(np.average(s_w[ks], weights=wc[ks])) if len(ks) \
+            else float(s_w.mean())
+    return ev.patterns[c_dom], s
+
+
+def _realize(pattern, w, s):
+    """Prune ``w`` with the winning pattern at target ``s`` — the same
+    per-pattern rules the evaluators trace (DESIGN.md §16)."""
+    import jax.numpy as jnp
+    w = jnp.asarray(w, jnp.float32)
+    if pattern == "unstructured":
+        return pruning.tile_prune(w, s)[0]
+    if pattern == "nm":
+        return pruning.nm_prune(w, int(pruning.nm_keep_for_sparsity(s)))
+    if pattern == "hierarchical":
+        r = float(np.clip(s / (2.0 - s), 0.0, 1.0))
+        return pruning.hierarchical_prune(
+            w, s / 2.0, int(pruning.nm_keep_for_sparsity(r)))[0]
+    return w                                       # activation: dense weights
+
+
+def bench_executed(winners):
+    """Run each stack winner's dominant pattern through the real kernel."""
+    from repro.kernels.block_sparse_matmul import (block_sparse_matmul,
+                                                   build_tile_schedule,
+                                                   tile_mask)
+    import jax.numpy as jnp
+    rows = []
+    rng = np.random.default_rng(0)
+    for stack, (ev, best, n) in winners.items():
+        pattern, s = _dominant_pattern(ev, best, n)
+        w = jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)
+        w2 = _realize(pattern, w, s)
+        mask = tile_mask(np.asarray(w2))
+        counts, indices = build_tile_schedule(mask)
+        x = jnp.asarray(rng.normal(size=(128, 512)), jnp.float32)
+        out = block_sparse_matmul(x, w2, jnp.asarray(counts),
+                                  jnp.asarray(indices), interpret=True)
+        ref = np.asarray(x @ w2)
+        np.testing.assert_allclose(np.asarray(out), ref, atol=1e-3,
+                                   rtol=1e-4)
+        steps = int(counts.sum())
+        full = mask.shape[0] * mask.shape[1]
+        row = {"stack": stack, "pattern": pattern, "s": round(s, 4),
+               "element_sparsity": round(float(pruning.sparsity_of(w2)), 4),
+               "schedule_steps": steps, "dense_steps": full,
+               "kernel_ok": True}
+        rows.append(row)
+        print(f"  {stack:4s} winner pattern={pattern:13s} s={s:.3f}  "
+              f"schedule {steps}/{full} tile-steps, kernel == dense ref")
+    return rows
+
+
+def run(smoke: bool = False):
+    iters = 8 if smoke else 16
+    iters_cnn = 48 if smoke else 64
+    iters_lm = 96 if smoke else 128
+    print("per-pattern decode microbench (kernels.kernel_costs)")
+    costs = bench_kernel_costs()
+    cfg = reduce_config(RESNET18)
+    # the win gate needs an informative accuracy axis: a weakly-trained CNN
+    # has tiny logit margins, ANY pruning scrambles its predictions, and
+    # the agreement proxy collapses to chance for every arm — so train to
+    # convergence and calibrate on the task distribution (on random noise
+    # the dense predictions are arbitrary to begin with)
+    params = trained_cnn(cfg, steps=80)
+    from repro.data.synthetic import image_batch
+    images = image_batch(cfg, 32, seed=0, step=999)["images"]
+    cnn_pack = (cfg, params, images)
+    print("default-pattern transcript identity (patterns=None vs "
+          "('unstructured',))")
+    ident = bench_default_identity(cnn_pack, iters)
+    print(f"pattern-aware vs unstructured-only search (cnn {iters_cnn} / "
+          f"lm {iters_lm} trials, TPU stacks, dense-anchored)")
+    win, winners = bench_pattern_win(cnn_pack, iters_cnn, iters_lm)
+    print("measured decode factors through the Eq. 6 meas term")
+    meas = bench_meas_term(costs["factors"])
+    print("winning schedules through block_sparse_matmul (interpret)")
+    executed = bench_executed(winners)
+    save_json("sparsity_bench.json", {
+        "smoke": smoke, "kernel_costs": costs, "default_identity": ident,
+        "pattern_win": win, "meas_term": meas, "executed": executed})
+    worst = min(r["gain"] for r in win)
+    emit("sparsity_bench.pattern_win", 0.0,
+         f"min hw-score gain {worst:.4f} over {len(win)} stacks; "
+         f"nm decode factor {costs['factors']['nm']:.2f}x")
+    return {"kernel_costs": costs, "pattern_win": win, "meas_term": meas,
+            "executed": executed}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced trial counts for CI")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -53,6 +53,24 @@ def cost_analysis_dict(compiled) -> Dict[str, float]:
     return out
 
 
+def compiled_cycles(compiled, *, flops_per_cycle: float = 2.0 * 128 * 128,
+                    bytes_per_cycle: float = 128.0) -> float:
+    """Roofline cycle estimate from a compiled program's cost analysis.
+
+    Deterministic (static analysis, no wall clock): cycles are the max of
+    the compute leg (flops / MXU flops-per-cycle) and the memory leg
+    (bytes accessed / HBM bytes-per-cycle), floored at 1. Returns 0.0 when
+    the backend reports no usable counters (caller falls back to a modeled
+    estimate — kernels/kernel_costs.py).
+    """
+    d = cost_analysis_dict(compiled)
+    flops = float(d.get("flops", 0.0))
+    nbytes = float(d.get("bytes accessed", 0.0))
+    if flops <= 0.0 and nbytes <= 0.0:
+        return 0.0
+    return max(1.0, flops / flops_per_cycle, nbytes / bytes_per_cycle)
+
+
 def _dims(s: str) -> List[int]:
     return [int(x) for x in s.split(",") if x] if s else []
 

@@ -19,6 +19,12 @@ failed compile, or ``REPRO_DSE_CKERNEL=0`` in the environment all degrade
 gracefully: ``get_lib()`` returns None and callers fall back to the pure
 numpy lockstep engine (``dse.py`` dispatches on availability).
 
+Pattern rows (DESIGN.md §16): batches whose ``LayerVectors.t_scale`` is
+set never reach this kernel — the dynamics-class key below compares the
+six pre-pattern per-layer constants only, so ``_run_batch_dispatch``
+routes patterned rows to the numpy lockstep engine (which consumes the
+host-scaled ``omsm`` and stays bit-exact vs the serial engines).
+
 Float contract — why the kernel is bit-exact vs the Python engines:
 
   * every float expression is the serial engine's, in the serial engine's

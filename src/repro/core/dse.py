@@ -245,6 +245,15 @@ def _run_incremental(lv: LayerVectors, hw: HardwareModel, budget: float,
     max_n = lv.max_n.tolist()
     max_spe = lv.max_spe.tolist()
     unit = lv.res_unit.tolist()
+    # t_cycles numerator per layer: (1 - s_eff) * m_dot, times the pattern
+    # decode-cost multiplier when one is set (DESIGN.md §16). With t_scale
+    # None this is the exact sub-expression t_cycles evaluated before, so
+    # the default path is bit-identical.
+    if lv.t_scale is None:
+        om = [(1.0 - s_eff[i]) * m_dot[i] for i in range(L)]
+    else:
+        tsc = lv.t_scale.tolist()
+        om = [(1.0 - s_eff[i]) * m_dot[i] * tsc[i] for i in range(L)]
     spe = [1] * L
     n = [1] * L
     # maintained per-layer rates: current (Eq. 2) and after one halving of
@@ -254,10 +263,12 @@ def _run_incremental(lv: LayerVectors, hw: HardwareModel, budget: float,
     thr_nh = [0.0] * L
     thr_sh = [0.0] * L
 
+    ceil = math.ceil
+
     def thr_of(i: int, s: int, nn: int) -> float:
         if not macs[i]:
             return float("inf")
-        t = t_cycles(s_eff[i], m_dot[i], nn)
+        t = max(1, ceil(om[i] / max(nn, 1)))
         return s * m_dot[i] / (macs[i] * t)
 
     def sync(i: int) -> None:
@@ -359,13 +370,15 @@ def _run_incremental(lv: LayerVectors, hw: HardwareModel, budget: float,
 def _layer_classes(lv: LayerVectors):
     """Partition layers into dynamics classes: two layers behave bit-
     identically inside the greedy iff their (macs, m_dot, s_eff, max_n,
-    max_spe, res_unit) tuples are equal — the rate function and resource
-    accounting read nothing else. Returns (C, pos) with ``pos[c]`` the
+    max_spe, res_unit, t_scale) tuples are equal — the rate function and
+    resource accounting read nothing else. Returns (C, pos) with ``pos[c]`` the
     ascending member positions of class ``c`` (first-appearance order).
     One ``tolist`` per column then a flat dict loop — per-element numpy
     indexing is the thing to avoid here, not the Python loop."""
+    tsc = [1.0] * len(lv) if lv.t_scale is None else lv.t_scale.tolist()
     cols = zip(lv.macs.tolist(), lv.m_dot.tolist(), lv.s_eff.tolist(),
-               lv.max_n.tolist(), lv.max_spe.tolist(), lv.res_unit.tolist())
+               lv.max_n.tolist(), lv.max_spe.tolist(), lv.res_unit.tolist(),
+               tsc)
     seen: Dict[tuple, int] = {}
     pos: List[List[int]] = []
     for i, key in enumerate(cols):
@@ -402,13 +415,20 @@ def _run_incremental_grouped(lv: LayerVectors, hw: HardwareModel,
     max_n = [int(lv.max_n[pos[c][0]]) for c in range(C)]
     max_spe = [int(lv.max_spe[pos[c][0]]) for c in range(C)]
     unit = [float(lv.res_unit[pos[c][0]]) for c in range(C)]
+    # per-class t_cycles numerator, pattern-scaled exactly like the flat
+    # engine (same float op order, so grouped == flat stays bit-exact)
+    if lv.t_scale is None:
+        om = [(1.0 - s_eff[c]) * m_dot[c] for c in range(C)]
+    else:
+        om = [(1.0 - s_eff[c]) * m_dot[c] * float(lv.t_scale[pos[c][0]])
+              for c in range(C)]
 
     ceil = math.ceil
 
     def thr_of(c: int, s: int, nn: int) -> float:
         if not macs[c]:
             return float("inf")
-        t = max(1, ceil((1.0 - s_eff[c]) * m_dot[c] / max(nn, 1)))
+        t = max(1, ceil(om[c] / max(nn, 1)))
         return s * m_dot[c] / (macs[c] * t)
 
     # groups: per class, ascending-start list of
@@ -763,8 +783,12 @@ def _run_incremental_batch(lv: LayerVectors, hw: HardwareModel,
     unit = lv.res_unit
     nz = macs > 0
     has_zero = not bool(nz.all())
-    # (1 - s_eff) * m_dot, the t_cycles numerator — scalar op order kept
+    # (1 - s_eff) * m_dot, the t_cycles numerator — scalar op order kept;
+    # pattern decode costs multiply afterwards exactly like the serial
+    # engines' per-layer ``* t_scale`` (DESIGN.md §16)
     omsm = (1.0 - S) * m_dot
+    if lv.t_scale is not None:
+        omsm = omsm * lv.t_scale
 
     # design-state n is always >= 1 (floors at 1, candidates are clipped),
     # so the scalar engine's max(nn, 1) divisor guard is an identity here
@@ -1137,6 +1161,17 @@ def _run_batch_dispatch(lv: LayerVectors, hw: HardwareModel, budget: float,
     kernel and falls back when the environment can't build it. Both are
     bit-exact vs the serial engines (property-tested), so ``auto`` is a
     pure perf choice — like ``_run_dse``'s."""
+    if lv.t_scale is not None and engine in ("auto", "compiled"):
+        # explicit lockstep-only fallback for patterned rows (DESIGN.md
+        # §16): the C kernel's dynamics-class key compares the six
+        # pre-pattern per-layer constants and doesn't know t_scale, so two
+        # layers with equal s_eff but different decode costs would be
+        # mis-grouped there. The numpy lockstep engine consumes the
+        # already-scaled omsm and stays bit-exact vs the serial engines.
+        if engine == "compiled":
+            raise RuntimeError("compiled batch engine does not support "
+                               "pattern t_scale rows; use lockstep/auto")
+        engine = "lockstep"
     if engine == "auto":
         engine = "compiled" if _dse_ckernel.get_lib() is not None \
             else "lockstep"
@@ -1349,15 +1384,31 @@ class DSECache:
 
     @staticmethod
     def _fingerprint(lv: LayerVectors, budget: float, max_iters: int) -> int:
+        # t_scale joins the workload constants (a pattern changes the
+        # dynamics, so anchors must never mix across decode-cost vectors);
+        # None keeps a distinct sentinel so the default path's keyspace is
+        # untouched within a session
         return hash((lv.macs.tobytes(), lv.m_dot.tobytes(),
                      lv.max_n.tobytes(), lv.max_spe.tobytes(),
-                     lv.res_unit.tobytes(), float(budget), int(max_iters)))
+                     lv.res_unit.tobytes(),
+                     None if lv.t_scale is None else lv.t_scale.tobytes(),
+                     float(budget), int(max_iters)))
+
+    @staticmethod
+    def _om(lv: LayerVectors, s_eff: np.ndarray) -> np.ndarray:
+        """The engines' t_cycles numerator ``(1 - s_eff) * m_dot``
+        (pattern-scaled when t_scale is set) — the single expression both
+        certificates must share with the engines float-for-float."""
+        om = (1.0 - s_eff) * lv.m_dot
+        if lv.t_scale is not None:
+            om = om * lv.t_scale
+        return om
 
     @staticmethod
     def _rate11(lv: LayerVectors) -> np.ndarray:
         """Per-layer rate at the (1, 1) floor design — the same floats the
         engines' ``thr_of(i, 1, 1)`` computes."""
-        t = np.maximum(1.0, np.ceil((1.0 - lv.s_eff) * lv.m_dot))
+        t = np.maximum(1.0, np.ceil(DSECache._om(lv, lv.s_eff)))
         with np.errstate(divide="ignore"):
             r = lv.m_dot / (lv.macs * t)
         return np.where(lv.macs > 0, r, np.inf)
@@ -1383,9 +1434,10 @@ class DSECache:
     def _tvec(self, lv: LayerVectors, s_eff: np.ndarray, flat_n: np.ndarray,
               counts: np.ndarray) -> np.ndarray:
         """Float t over every (layer, reachable N) pair — the same
-        ``(1 - s) * m_dot`` product then division the engines compute, so
-        equality here is equality of every t either engine can produce."""
-        om = np.repeat((1.0 - s_eff) * lv.m_dot, counts)
+        ``(1 - s) * m_dot`` product (pattern-scaled) then division the
+        engines compute, so equality here is equality of every t either
+        engine can produce."""
+        om = np.repeat(self._om(lv, s_eff), counts)
         return np.maximum(1.0, np.ceil(om / flat_n))
 
     def _lookup(self, fp: int, lv: LayerVectors, s_eff: np.ndarray,
@@ -1475,8 +1527,11 @@ class DSECache:
         # just runs cold — same bits either way, by soundness)
         A = len(a_s)
         if A:
+            om11 = (1.0 - S) * lv.m_dot
+            if lv.t_scale is not None:
+                om11 = om11 * lv.t_scale
             with np.errstate(divide="ignore"):
-                t11 = np.maximum(1.0, np.ceil((1.0 - S) * lv.m_dot))
+                t11 = np.maximum(1.0, np.ceil(om11))
                 R11 = lv.m_dot / (lv.macs * t11)
             R11 = np.where(lv.macs > 0, R11, np.inf)      # (B, L)
             th = np.asarray(a_th)[None, :, None]

@@ -36,11 +36,20 @@ class Lambdas:
     when an evaluator reports ``lat`` (tail latency / SLO target, e.g.
     ``repro.sim.slo.SimLatencyEvaluator``) a hardware-aware search
     subtracts ``lat * m["lat"]``. The default 0.0 leaves every existing
-    search bit-identical."""
+    search bit-identical.
+
+    ``meas`` weights the measured-kernel-cost term (DESIGN.md §16): when an
+    evaluator is built with ``pattern_costs`` (decode factors from the
+    ``kernels.kernel_costs`` microbench) it reports ``meas`` — the
+    weight-fraction-weighted measured relative cycle estimate of the
+    realized pattern assignment — and a hardware-aware search subtracts
+    ``meas * m["meas"]``. Default 0.0 = modeled Eq. 1 costs only,
+    bit-identical to the pre-pattern search."""
     spa: float = 0.3
     thr: float = 0.5
     dsp: float = 0.3
     lat: float = 0.0
+    meas: float = 0.0
 
 
 @dataclass
@@ -77,7 +86,8 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
                 s_max: float = 0.95, seed: int = 0,
                 include_act: bool = True,
                 batch_size: Optional[int] = None,
-                liar: Optional[str] = "min") -> SearchResult:
+                liar: Optional[str] = "min",
+                x0: Optional[np.ndarray] = None) -> SearchResult:
     """Search per-layer sparsity targets.
 
     evaluate(x) must return a dict with keys:
@@ -88,7 +98,9 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
     and may report ``lat`` (simulated tail latency / SLO target, e.g. from
     ``repro.sim.slo.SimLatencyEvaluator``) — subtracted with weight
     ``lambdas.lat`` in a hardware-aware search (DESIGN.md §13).
-    x layout: [s_w_0..s_w_{L-1}] (+ [s_a_0..s_a_{L-1}] when include_act).
+    x layout: [s_w_0..s_w_{L-1}] (+ [s_a_0..s_a_{L-1}] when include_act)
+    (+ [pattern_0..pattern_{P-1}] categorical dims when the evaluator
+    exposes ``n_pattern_dims > 0`` — DESIGN.md §16).
 
     When the evaluator exposes a ``lambdas`` attribute (``CNNEvaluator``), a
     hardware-aware search installs a copy of its own ``lambdas`` for the
@@ -112,10 +124,34 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
     ``lambdas`` defaults to a fresh ``Lambdas()`` per call — pass an
     instance to override Eq. 6 weights (concurrent searches never alias
     each other's weights).
+
+    ``x0`` anchors the search: the point is evaluated as trial 0 (consuming
+    one of ``iters``) and told to the TPE before any proposal is drawn, so
+    a known-good configuration (e.g. the dense network, ``np.zeros(dim)``)
+    is always in the trial set and the guided phase explores around it.
+    ``None`` (default) changes nothing — proposal streams stay bit-identical.
     """
     lambdas = Lambdas() if lambdas is None else lambdas
     dim = n_layers * (2 if include_act else 1)
-    opt = TPE(lo=np.zeros(dim), hi=np.full(dim, s_max), seed=seed)
+    # pattern axis (DESIGN.md §16): an evaluator with >1 sparsity pattern
+    # exposes n_pattern_dims tied categorical variables; they ride at the
+    # END of x as TPE categorical dims so the search picks each matrix
+    # kind's pattern jointly with its sparsity level. n_pattern_dims == 0
+    # (no patterns, or the single-pattern degenerate axis) constructs the
+    # exact pre-pattern TPE — bit-identical proposal stream.
+    n_pat = int(getattr(evaluate, "n_pattern_dims", 0) or 0)
+    if n_pat:
+        n_cats = len(evaluate.patterns)
+        opt = TPE(
+            lo=np.zeros(dim + n_pat),
+            hi=np.concatenate([np.full(dim, s_max),
+                               np.full(n_pat, float(n_cats))]),
+            seed=seed,
+            cats=np.concatenate([np.zeros(dim, np.int64),
+                                 np.full(n_pat, n_cats, np.int64)]))
+        dim += n_pat
+    else:
+        opt = TPE(lo=np.zeros(dim), hi=np.full(dim, s_max), seed=seed)
     result = SearchResult(best_x=np.zeros(dim), best_score=-np.inf,
                           best_metrics={})
     def record(x: np.ndarray, m: Dict[str, float]) -> float:
@@ -124,6 +160,8 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
             score += lambdas.thr * m["thr_norm"] - lambdas.dsp * m["dsp"]
             if lambdas.lat and "lat" in m:
                 score -= lambdas.lat * m["lat"]
+            if lambdas.meas and "meas" in m:
+                score -= lambdas.meas * m["meas"]
         m["score"] = score
         result.trials.append(Trial(x=x, score=score, metrics=m))
         if score > result.best_score:
@@ -140,8 +178,17 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
     if sync_lam:
         evaluate.lambdas = replace(lambdas)
     try:
+        n0 = 0
+        if x0 is not None:
+            xa = np.asarray(x0, dtype=np.float64).copy()
+            if len(xa) != dim:
+                raise ValueError(
+                    f"x0 has {len(xa)} dims, search space has {dim}")
+            m = dict(evaluate(xa))
+            opt.tell(xa, record(xa, m))
+            n0 = 1
         if batch_size is None:
-            for it in range(iters):
+            for it in range(max(iters - n0, 0)):
                 x = opt.ask()
                 m = dict(evaluate(x))
                 opt.tell(x, record(x, m))
@@ -150,7 +197,7 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         eval_batch = getattr(evaluate, "evaluate_batch", None)
-        done = 0
+        done = n0
         while done < iters:
             k = min(batch_size, iters - done)
             xs = opt.ask_batch(k, liar=liar)
@@ -225,6 +272,25 @@ def _gaussian_energy_curve(n_grid: int = 257, n_draws: int = 1 << 15,
                      np.arange(n_draws + 1) / n_draws, cum)
 
 
+def _nm_energy_curve(m: int = pruning.NM_M, n_draws: int = 1 << 13,
+                     seed: int = 0):
+    """``(s_grid, removed)`` over the N:M grid s = 1 - n/m: fraction of L2
+    weight energy removed when every m-group of an i.i.d. Gaussian tensor
+    keeps only its top-n magnitudes. Groupwise top-n removes MORE energy
+    than unconstrained global magnitude pruning at equal sparsity (the
+    structure tax) but far less than tile pruning's uniform fraction — the
+    accuracy-side half of the pattern trade-off (DESIGN.md §16). Fixed-seed
+    Monte Carlo, like ``_gaussian_energy_curve``; evaluators interpolate,
+    and every realizable sparsity lands exactly on a grid node."""
+    g = np.random.default_rng(seed).standard_normal((n_draws, m)) ** 2
+    g = -np.sort(-g, axis=1)                       # descending per group
+    cum = np.cumsum(g, axis=1)                     # top-n kept energy
+    kept = np.concatenate([[0.0], cum.sum(axis=0)]) / cum[:, -1].sum()
+    removed = (1.0 - kept)[::-1]                   # index: n = m .. 0
+    s_grid = 1.0 - np.arange(m, -1, -1) / m        # ascending 0 .. 1
+    return s_grid, removed
+
+
 @dataclass
 class LMEvaluator:
     """Eq. 6 metric dict for one sparsity proposal on an LM layer stack.
@@ -284,10 +350,27 @@ class LMEvaluator:
     dse_engine: str = "auto"      # greedy engine (flat pins seed behavior)
     batch_dse: bool = True        # proposal-batched DSE in evaluate_batch
     #                               (False pins the serial per-proposal loop)
+    patterns: Optional[tuple] = None   # sparsity-pattern axis, a subset of
+    #                               pruning.PATTERNS (DESIGN.md §16). None
+    #                               keeps the literal pre-pattern code path;
+    #                               ("unstructured",) routes through the
+    #                               pattern realization pinned to the seed
+    #                               rule (bit-identical metrics, property-
+    #                               tested); >1 entries add one tied
+    #                               categorical TPE variable per matrix kind
+    pattern_costs: Optional[dict] = None   # pattern -> measured decode
+    #                               factor c_p >= 1 (kernels.kernel_costs.
+    #                               decode_factors). Enables t_scale decode
+    #                               cost in Eq. 1 AND the ``meas`` metric
 
     def __post_init__(self):
         if self.tie not in ("kind", "none"):
             raise ValueError(f"unknown tie mode {self.tie!r}")
+        if self.patterns is not None:
+            self.patterns = tuple(self.patterns)
+            bad = [p for p in self.patterns if p not in pruning.PATTERNS]
+            if bad or not self.patterns:
+                raise ValueError(f"unknown patterns {bad or self.patterns}")
         self.layers = lm_layer_costs(self.cfg, seq_len=self.seq_len)
         self.prunable = [l for l in self.layers if l.prunable]
         kinds: List[str] = []
@@ -312,28 +395,139 @@ class LMEvaluator:
         self._lv0 = self.hw.layer_vectors(self.layers)
         self._prunable_idx = np.array(
             [i for i, l in enumerate(self.layers) if l.prunable], np.int64)
-        if self.tiled:
-            import math
+        import math
 
-            from repro.core.perf_model import MXU_TILE
-            # same tile count tile_quantize_sparsity derives — one constant
-            self._n_tiles = np.array(
-                [math.ceil(l.m_dot / MXU_TILE) *
-                 math.ceil(max(1, l.weight_count // l.m_dot) / MXU_TILE)
-                 for l in self.prunable], np.float64)
+        from repro.core.perf_model import MXU_TILE
+        # same tile count tile_quantize_sparsity derives — one constant
+        # (needed off-TPU too: hierarchical patterns tile-quantize their
+        # tile-level half on any backend)
+        self._n_tiles = np.array(
+            [math.ceil(l.m_dot / MXU_TILE) *
+             math.ceil(max(1, l.weight_count // l.m_dot) / MXU_TILE)
+             for l in self.prunable], np.float64)
+        # pattern axis state (DESIGN.md §16)
+        self.n_pattern_dims = self.n_search \
+            if self.patterns is not None and len(self.patterns) > 1 else 0
+        self._pattern_factors = {p: 1.0 for p in pruning.PATTERNS}
+        if self.pattern_costs:
+            self._pattern_factors.update(
+                {k: float(v) for k, v in self.pattern_costs.items()})
+        if self.patterns is not None:
+            self._nm_s_grid, self._nm_curve = _nm_energy_curve()
+            self._egrid = np.linspace(0.0, 1.0, len(self._energy))
         dense = incremental_dse(self.layers, self.hw, self.budget,
                                 max_iters=self.dse_iters)
         self.dense_thr = dense.throughput * self.hw.freq
 
     # ------------------------------------------------------------------ #
     def _split(self, x: np.ndarray):
-        """Search vector -> per-prunable-layer (s_w, s_a) targets."""
+        """Search vector -> per-prunable-layer (s_w, s_a) targets. Pattern
+        dims ride at the END of x and are stripped first, so the
+        include_act length test below never misreads a categorical dim as
+        an activation target."""
         g = np.asarray(self._group)
         x = np.asarray(x, dtype=np.float64)
+        if self.n_pattern_dims and len(x) > self.n_search:
+            x = x[:-self.n_pattern_dims]
         s_w = x[:self.n_search][g]
         s_a = x[self.n_search:2 * self.n_search][g] \
             if len(x) >= 2 * self.n_search else np.zeros(len(g))
         return s_w, s_a
+
+    def _pattern_codes(self, x: np.ndarray) -> np.ndarray:
+        """Per-prunable-layer index into ``self.patterns`` for one proposal
+        (all zeros when the axis is degenerate — a single pattern adds no
+        search dims, every layer is pinned to it)."""
+        g = np.asarray(self._group)
+        if self.n_pattern_dims == 0:
+            return np.zeros(len(g), np.int64)
+        raw = np.asarray(x, dtype=np.float64)[-self.n_pattern_dims:]
+        codes = np.clip(raw.astype(np.int64), 0, len(self.patterns) - 1)
+        return codes[g]
+
+    def _realize_pattern(self, x: np.ndarray):
+        """Pattern-aware realization (DESIGN.md §16): proposal -> realized
+        per-prunable (s_w, s_a), energy removed, effective sparsity, tile
+        fraction, decode t_scale, and pattern codes.
+
+        Per-pattern rules (``"unstructured"`` reproduces ``_realize``'s
+        floats exactly — the default-pattern bit-identity contract):
+
+          unstructured   tile-quantized s_w on TPU (whole-tile skips, e_w
+                         linear in the tile fraction), raw s_w elsewhere
+                         (Gaussian magnitude energy curve)
+          nm             s_w snaps to the N:M grid floor(s*M)/M; full
+                         element sparsity counts on TPU (structured decode
+                         a la 2:4 sparse cores) at decode cost c_nm;
+                         energy from the groupwise top-n curve
+          hierarchical   tile-quantized HALF the budget at tile level, the
+                         residual as intra-tile N:M (HighLight-style);
+                         energy/e_eff compose multiplicatively
+          activation     weights stay dense; the searched s_w converts to
+                         extra realized activation sparsity
+                         1-(1-s_a)(1-s_w) — free accuracy-wise on the
+                         weight side, but buys nothing on a TPU (the MXU
+                         never skips dynamic zeros)
+        """
+        s_w, s_a = self._split(x)
+        codes = self._pattern_codes(x)
+        L = len(codes)
+        M = pruning.NM_M
+        sw_c = np.clip(s_w, 0.0, 1.0)
+        sw_real = np.zeros(L)
+        sa_real = np.array(s_a, dtype=np.float64)
+        e_w = np.zeros(L)
+        swt = np.zeros(L)                        # tile-level fraction
+        tsc = np.ones(L)
+        for k, pname in enumerate(self.patterns):
+            ii = np.flatnonzero(codes == k)
+            if ii.size == 0:
+                continue
+            if pname == "unstructured":
+                if self.tiled:
+                    q = np.floor(sw_c[ii] * self._n_tiles[ii]) \
+                        / self._n_tiles[ii]
+                    sw_real[ii] = q
+                    e_w[ii] = q
+                    swt[ii] = q
+                else:
+                    sw_real[ii] = s_w[ii]
+                    e_w[ii] = np.interp(s_w[ii], self._egrid, self._energy)
+            elif pname == "nm":
+                s_nm = np.minimum(np.floor(sw_c[ii] * M), M - 1) / M
+                sw_real[ii] = s_nm
+                e_w[ii] = np.interp(s_nm, self._nm_s_grid, self._nm_curve)
+                tsc[ii] = self._pattern_factors["nm"]
+            elif pname == "hierarchical":
+                st = np.floor(sw_c[ii] / 2.0 * self._n_tiles[ii]) \
+                    / self._n_tiles[ii]
+                r = np.clip((sw_c[ii] - st) / np.maximum(1.0 - st, 1e-12),
+                            0.0, 1.0)
+                s_nm = np.minimum(np.floor(r * M), M - 1) / M
+                sw_real[ii] = 1.0 - (1.0 - st) * (1.0 - s_nm)
+                e_w[ii] = st + (1.0 - st) * \
+                    np.interp(s_nm, self._nm_s_grid, self._nm_curve)
+                swt[ii] = st
+                tsc[ii] = self._pattern_factors["hierarchical"]
+            else:                                # activation
+                sa_real[ii] = pruning.act_realize_pattern(sw_c[ii], s_a[ii])
+        # effective sparsity: full element s_w on TPU for structured-decode
+        # patterns, whole-tile fraction for unstructured/activation; pair
+        # sparsity on element-granular (FPGA SPE) backends
+        if self.tiled:
+            s_eff_p = np.where(
+                np.isin(codes, [k for k, p in enumerate(self.patterns)
+                                if p in ("nm", "hierarchical")]),
+                sw_real, swt)
+        else:
+            s_eff_p = 1.0 - (1.0 - sw_real) * (1.0 - sa_real)
+        s_eff = np.zeros(len(self.layers), dtype=np.float64)
+        s_eff[self._prunable_idx] = s_eff_p
+        t_full = None
+        if np.any(tsc != 1.0):
+            t_full = np.ones(len(self.layers), dtype=np.float64)
+            t_full[self._prunable_idx] = tsc
+        return sw_real, sa_real, e_w, s_eff_p, swt, tsc, s_eff, t_full, codes
 
     def _realize(self, x: np.ndarray):
         """Proposal -> (realized per-prunable s_w, s_a, full-stack s_eff).
@@ -355,9 +549,28 @@ class LMEvaluator:
 
     def sparse_layers(self, x: np.ndarray) -> List[LayerCost]:
         """The sparse LayerCost stack one proposal realizes (tile-quantized
-        on TPU). Feeds the partitioned multi-chip DP directly."""
+        on TPU). Feeds the partitioned multi-chip DP directly. With a
+        pattern axis the stack carries each layer's realized pattern and
+        decode ``t_scale`` so ``hw.layer_vectors`` reproduces exactly the
+        effective sparsity the accelerated path scored."""
+        if self.patterns is not None:
+            sw_real, sa_real, _, _, swt, tsc, _, _, codes = \
+                self._realize_pattern(x)
+            out: List[LayerCost] = []
+            i = 0
+            for l in self.layers:
+                if not l.prunable:
+                    out.append(l)
+                    continue
+                out.append(LayerCost(**{
+                    **l.__dict__, "s_w": float(sw_real[i]),
+                    "s_a": float(sa_real[i]), "s_w_tile": float(swt[i]),
+                    "pattern": self.patterns[codes[i]],
+                    "t_scale": float(tsc[i])}))
+                i += 1
+            return out
         s_w, s_a = self._split(x)
-        out: List[LayerCost] = []
+        out = []
         i = 0
         for l in self.layers:
             if not l.prunable:
@@ -385,6 +598,8 @@ class LMEvaluator:
         return self.lambdas.thr * thr_norm - self.lambdas.dsp * dsp
 
     def __call__(self, x: np.ndarray) -> Dict[str, float]:
+        if self.patterns is not None:
+            return self._call_pattern(x)
         if self.accel:
             sw, sa, s_eff = self._realize(x)
             lv = replace(self._lv0, s_eff=s_eff)
@@ -400,6 +615,44 @@ class LMEvaluator:
                                   max_iters=self.dse_iters,
                                   engine=self.dse_engine)
         return self._finish(sw, sa, dse)
+
+    def _call_pattern(self, x: np.ndarray) -> Dict[str, float]:
+        """Pattern-axis scoring path: realize per-pattern, thread the decode
+        ``t_scale`` through the DSE (``LayerVectors.t_scale`` — identical
+        Eq. 1 mapping in every engine), finish with per-pattern energies."""
+        rz = self._realize_pattern(x)
+        sw_real, sa_real, e_w, s_eff_p, _, tsc, s_eff, t_full, _ = rz
+        if self.accel:
+            lv = replace(self._lv0, s_eff=s_eff, t_scale=t_full)
+            dse = self.dse_cache.dse_vec(lv, self.hw, self.budget,
+                                         max_iters=self.dse_iters,
+                                         engine=self.dse_engine)
+        else:
+            dse = incremental_dse(self.sparse_layers(x), self.hw,
+                                  self.budget, max_iters=self.dse_iters,
+                                  engine=self.dse_engine)
+        return self._finish_pattern(sw_real, sa_real, e_w, s_eff_p, tsc, dse)
+
+    def _finish_pattern(self, sw_real, sa_real, e_w, s_eff_p, tsc,
+                        dse) -> Dict[str, float]:
+        """Per-pattern ``_finish``: energies come pre-computed from
+        ``_realize_pattern`` (each pattern has its own accuracy curve).
+        ``meas`` — the measured relative cycle estimate
+        sum_l wfrac_l * c_l * (1 - s_eff_l) — is reported ONLY when
+        ``pattern_costs`` was provided, so a cost-less pattern evaluator
+        emits exactly the seed metric dict (Eq. 6 term gating,
+        ``Lambdas.meas``)."""
+        e_a = np.interp(sa_real, np.linspace(0.0, 1.0, len(self._energy)),
+                        self._energy)
+        acc = float(np.exp(-self.alpha *
+                           np.dot(self._wfrac,
+                                  e_w + self.act_weight * e_a)))
+        spa = float(np.dot(self._wfrac, (sw_real + sa_real) / 2.0))
+        m = {"acc": acc, "spa": spa,
+             **frontier_hw_metrics(self, dse.frontier)}
+        if self.pattern_costs is not None:
+            m["meas"] = float(np.dot(self._wfrac, tsc * (1.0 - s_eff_p)))
+        return m
 
     def _finish(self, sw: np.ndarray, sa: np.ndarray, dse) -> Dict[str, float]:
         """Realized sparsity + DSE result -> the Eq. 6 metric dict (shared
@@ -426,10 +679,37 @@ class LMEvaluator:
         k serial greedy runs. Bit-identical to ``[self(x) for x in xs]``
         (batch-engine exactness + certificate soundness, property-tested).
         A non-``auto`` ``dse_engine`` pins a specific serial engine, so it
-        keeps the plain loop."""
+        keeps the plain loop.
+
+        With a pattern axis, rows are grouped by their decode ``t_scale``
+        vector (one ``LayerVectors`` template per distinct pattern
+        assignment's constants) and each group batches through
+        ``dse_vec_batch`` — rows are independent, so grouping preserves
+        per-row results exactly; patterned groups take the batch
+        dispatcher's explicit lockstep route (DESIGN.md §16)."""
         if len(xs) < 2 or not self.accel or not self.batch_dse \
                 or self.dse_engine != "auto":
             return [self(x) for x in xs]
+        if self.patterns is not None:
+            rz = [self._realize_pattern(x) for x in xs]
+            keys = [None if r[7] is None else r[7].tobytes() for r in rz]
+            out: List[Optional[Dict[str, float]]] = [None] * len(xs)
+            seen: List = []
+            for key in keys:
+                if key not in seen:
+                    seen.append(key)
+            for key in seen:
+                rows = [i for i, k2 in enumerate(keys) if k2 == key]
+                lv = self._lv0 if key is None else \
+                    replace(self._lv0, t_scale=rz[rows[0]][7])
+                S = np.stack([rz[i][6] for i in rows])
+                dses = self.dse_cache.dse_vec_batch(
+                    lv, self.hw, self.budget, S, max_iters=self.dse_iters)
+                for i, dse in zip(rows, dses):
+                    sw_real, sa_real, e_w, s_eff_p, _, tsc = rz[i][:6]
+                    out[i] = self._finish_pattern(sw_real, sa_real, e_w,
+                                                  s_eff_p, tsc, dse)
+            return out
         realized = [self._realize(x) for x in xs]
         S = np.stack([s_eff for _, _, s_eff in realized])
         dses = self.dse_cache.dse_vec_batch(self._lv0, self.hw, self.budget,
@@ -476,11 +756,28 @@ class CNNEvaluator:
     budget_fracs: tuple = (0.25, 0.5, 0.75, 1.0)   # frontier_hw_metrics)
     dse_engine: str = "auto"    # greedy engine (flat pins seed behavior)
     batch_dse: bool = True      # proposal-batched DSE in evaluate_batch
+    patterns: Optional[tuple] = None   # sparsity-pattern axis (DESIGN.md
+    #                             §16): None = literal pre-pattern path;
+    #                             ("unstructured",) pins every layer to the
+    #                             seed pruner (bit-identical by routing
+    #                             through the SAME jitted closure); >1
+    #                             entries add one categorical TPE variable
+    #                             per prunable layer, realized by a traced
+    #                             lax.switch pruner (one compile for all
+    #                             pattern assignments)
+    pattern_costs: Optional[dict] = None   # pattern -> measured decode
+    #                             factor (kernels.kernel_costs);
+    #                             enables t_scale + the ``meas`` metric
 
     def __post_init__(self):
         from repro.core.perf_model import cnn_layer_costs
         from repro.models import cnn
         self._cnn = cnn
+        if self.patterns is not None:
+            self.patterns = tuple(self.patterns)
+            bad = [p for p in self.patterns if p not in pruning.PATTERNS]
+            if bad or not self.patterns:
+                raise ValueError(f"unknown patterns {bad or self.patterns}")
         self.layers = [l for l in cnn_layer_costs(self.cost_cfg or self.cfg)]
         self.prunable = [l for l in self.layers if l.prunable]
         self.names = [l.name for l in self.prunable]
@@ -539,6 +836,94 @@ class CNNEvaluator:
         # batched frontier: one vmapped prune+forward for a whole batch of
         # proposals (compiled once per batch shape) instead of B jit calls
         self._eval_batch = jax.jit(jax.vmap(_eval, in_axes=(None, 0, 0)))
+
+        # pattern axis state (DESIGN.md §16)
+        self.n_pattern_dims = len(self.prunable) \
+            if self.patterns is not None and len(self.patterns) > 1 else 0
+        self._pattern_factors = {p: 1.0 for p in pruning.PATTERNS}
+        if self.pattern_costs:
+            self._pattern_factors.update(
+                {k: float(v) for k, v in self.pattern_costs.items()})
+        # the degenerate ("unstructured",) axis routes through the seed
+        # closure itself (codes are all zero and unstructured IS the seed
+        # pruner), so default-pattern searches share the compiled program
+        # and the floats bit-for-bit; any other axis needs the traced
+        # per-layer pattern dispatch below
+        self._needs_pattern_eval = self.patterns is not None and \
+            self.patterns != ("unstructured",)
+        if self._needs_pattern_eval:
+            act_code = self.patterns.index("activation") \
+                if "activation" in self.patterns else -1
+
+            def _branches_for(n):
+                """Per-layer pruner branch list, ``self.patterns``-ordered.
+                Pattern codes are TRACED so one compile covers every
+                assignment the TPE proposes (under vmap the switch becomes
+                a select over all branches)."""
+                def b_unstructured(w, s):
+                    if self.tiled:
+                        w2, swt = pruning.tile_prune(w, s)
+                        return w2, jnp.asarray(swt, jnp.float32)
+                    tau = pruning.threshold_for_sparsity_sorted(
+                        self._asort[n], s) if self._asort is not None \
+                        else pruning.threshold_for_sparsity(w, s)
+                    return pruning.prune_tensor(w, tau), jnp.float32(0.0)
+
+                def b_nm(w, s):
+                    return pruning.nm_prune(
+                        w, pruning.nm_keep_for_sparsity(s)), jnp.float32(0.0)
+
+                def b_hier(w, s):
+                    # half the budget tile-level, residual intra-tile N:M
+                    wt, swt = pruning.tile_prune(w, s / 2.0)
+                    r = jnp.clip(s / (2.0 - s), 0.0, 1.0)
+                    w2 = pruning.nm_prune(wt, pruning.nm_keep_for_sparsity(r))
+                    return w2, jnp.asarray(swt, jnp.float32)
+
+                def b_act(w, s):
+                    return w, jnp.float32(0.0)   # weights stay dense
+
+                table = {"unstructured": b_unstructured, "nm": b_nm,
+                         "hierarchical": b_hier, "activation": b_act}
+                return [table[p] for p in self.patterns]
+
+            def _eval_p(params, s_w, s_a, codes):
+                pruned = dict(params)
+                achieved = []
+                tile_fracs = []
+                taus = {}
+                for i, n in enumerate(self.names):
+                    w = params[n]["w"]
+                    sw_i, code_i = s_w[i], codes[i]
+                    sa_i = s_a[i]
+                    if act_code >= 0:
+                        # activation pattern: the weight budget converts to
+                        # extra realized activation sparsity
+                        sa_i = jnp.where(
+                            code_i == act_code,
+                            1.0 - (1.0 - sa_i) *
+                            (1.0 - jnp.clip(sw_i, 0.0, 1.0)),
+                            sa_i)
+                    w2, swt = jax.lax.switch(code_i, _branches_for(n),
+                                             w, sw_i)
+                    pruned[n] = dict(params[n], w=w2)
+                    achieved.append(jnp.mean(w2 == 0.0))
+                    tile_fracs.append(swt)
+                    qidx = jnp.clip(
+                        (sa_i * self._act_q.shape[1]).astype(jnp.int32),
+                        0, self._act_q.shape[1] - 1)
+                    taus[n] = self._act_q[i, qidx]
+                logits, stats = cnn.forward(self.cfg, pruned, self.images,
+                                            sparsity=taus,
+                                            collect_stats=True)
+                acc = jnp.mean(logits.argmax(-1) == self.dense_pred)
+                s_a_meas = jnp.stack([stats[n] for n in self.names])
+                return (acc, jnp.stack(achieved), s_a_meas,
+                        jnp.stack(tile_fracs))
+
+            self._eval_p = jax.jit(_eval_p)
+            self._eval_p_batch = jax.jit(
+                jax.vmap(_eval_p, in_axes=(None, 0, 0, 0)))
         # batch-shape bucketing state: ``batch_shapes`` records every batch
         # shape actually handed to the vmapped executable (== compiles);
         # ragged batches pad up to an already-compiled shape when one is
@@ -566,15 +951,30 @@ class CNNEvaluator:
 
     def _split(self, x: np.ndarray):
         L = len(self.prunable)
+        x = np.asarray(x, dtype=np.float64)
+        if self.n_pattern_dims and len(x) > L:
+            x = x[:-self.n_pattern_dims]    # pattern dims ride at the END
         s_w = jnp.asarray(x[:L])
         s_a = jnp.asarray(x[L:2 * L]) if len(x) >= 2 * L else jnp.zeros(L)
         return s_w, s_a
 
+    def _pattern_codes(self, x: np.ndarray) -> np.ndarray:
+        """Per-prunable-layer index into ``self.patterns`` (all zeros for
+        the degenerate single-pattern axis)."""
+        L = len(self.prunable)
+        if self.n_pattern_dims == 0:
+            return np.zeros(L, np.int64)
+        raw = np.asarray(x, dtype=np.float64)[-self.n_pattern_dims:]
+        return np.clip(raw.astype(np.int64), 0, len(self.patterns) - 1)
+
     def _sparse_layers(self, sw_meas: np.ndarray, sa_meas: np.ndarray,
-                       swt_meas: Optional[np.ndarray] = None):
+                       swt_meas: Optional[np.ndarray] = None,
+                       codes: Optional[np.ndarray] = None):
         """Measured per-layer sparsity -> LayerCost pipeline + avg sparsity.
         ``swt_meas`` (TPU path) carries the measured all-zero-tile fraction
-        of the actually pruned weights into ``LayerCost.s_w_tile``."""
+        of the actually pruned weights into ``LayerCost.s_w_tile``.
+        ``codes`` (pattern axis) stamps each layer's realized pattern and
+        decode ``t_scale`` so the perf model prices it per-pattern."""
         layers = []
         spa_num = spa_den = 0.0
         i = 0
@@ -582,23 +982,44 @@ class CNNEvaluator:
             if l.prunable:
                 sw, sa = float(sw_meas[i]), float(sa_meas[i])
                 swt = float(swt_meas[i]) if swt_meas is not None else 0.0
+                extra = {}
+                if codes is not None:
+                    pname = self.patterns[int(codes[i])]
+                    extra = {"pattern": pname,
+                             "t_scale": self._pattern_factors[pname]}
                 i += 1
                 layers.append(LayerCost(**{**l.__dict__, "s_w": sw,
-                                           "s_a": sa, "s_w_tile": swt}))
+                                           "s_a": sa, "s_w_tile": swt,
+                                           **extra}))
                 spa_num += (sw + sa) / 2 * l.weight_count
                 spa_den += l.weight_count
             else:
                 layers.append(l)
         return layers, spa_num / max(spa_den, 1e-9)
 
+    def _eval_any(self, x: np.ndarray):
+        """One jitted prune+forward for one proposal, routed through the
+        pattern dispatch when the axis needs it. Returns
+        (acc, sw_meas, sa_meas, swt_meas, codes) as numpy."""
+        s_w, s_a = self._split(x)
+        if self.patterns is not None and self._needs_pattern_eval:
+            codes = self._pattern_codes(x)
+            out = self._eval_p(self.params, s_w, s_a,
+                               jnp.asarray(codes, jnp.int32))
+        else:
+            codes = self._pattern_codes(x) if self.patterns is not None \
+                else None
+            out = self._eval(self.params, s_w, s_a)
+        acc, sw_meas, sa_meas, swt_meas = map(np.asarray, out)
+        return acc, sw_meas, sa_meas, swt_meas, codes
+
     def sparse_layers(self, x: np.ndarray):
         """The measured sparse LayerCost pipeline for one proposal (one
         jitted prune+forward). Feeds the partitioned multi-chip DSE demo."""
-        s_w, s_a = self._split(x)
-        _, sw_meas, sa_meas, swt_meas = map(np.asarray,
-                                            self._eval(self.params, s_w, s_a))
+        acc, sw_meas, sa_meas, swt_meas, codes = self._eval_any(x)
         return self._sparse_layers(sw_meas, sa_meas,
-                                   swt_meas if self.tiled else None)[0]
+                                   swt_meas if self.tiled else None,
+                                   codes=codes)[0]
 
     def _hw_terms(self, res: np.ndarray, thr: np.ndarray):
         """(thr in samples/s, thr_norm, dsp) for frontier points, vectorized.
@@ -613,12 +1034,27 @@ class CNNEvaluator:
         _, thr_norm, dsp = self._hw_terms(res, thr)
         return self.lambdas.thr * thr_norm - self.lambdas.dsp * dsp
 
+    def _meas_term(self, layers) -> float:
+        """Measured relative cycle estimate of one realized assignment:
+        weight-fraction-weighted c_l * (1 - s_eff_l) over prunable layers
+        (Eq. 6 ``meas``, subtracted with ``Lambdas.meas``)."""
+        num = den = 0.0
+        for l in layers:
+            if not l.prunable:
+                continue
+            num += l.weight_count * l.t_scale * \
+                (1.0 - self.hw.effective_sparsity(l))
+            den += l.weight_count
+        return num / max(den, 1e-9)
+
     def _metrics(self, acc: float, sw_meas: np.ndarray, sa_meas: np.ndarray,
-                 swt_meas: Optional[np.ndarray] = None) -> Dict[str, float]:
+                 swt_meas: Optional[np.ndarray] = None,
+                 codes: Optional[np.ndarray] = None) -> Dict[str, float]:
         """Measured per-layer sparsity -> perf model (Eq. 1-3) -> one DSE
         (through the ``DSECache`` when accelerated) -> Eq. 6 hardware terms
         off the frontier (``frontier_hw_metrics``) -> the metric dict."""
-        layers, spa = self._sparse_layers(sw_meas, sa_meas, swt_meas)
+        layers, spa = self._sparse_layers(sw_meas, sa_meas, swt_meas,
+                                          codes=codes)
         if self.dse_cache is not None:
             dse = self.dse_cache.dse(layers, self.hw, self.budget,
                                      max_iters=self.dse_iters,
@@ -627,36 +1063,69 @@ class CNNEvaluator:
             dse = incremental_dse(layers, self.hw, self.budget,
                                   max_iters=self.dse_iters,
                                   engine=self.dse_engine)
-        return {"acc": acc, "spa": spa,
-                **frontier_hw_metrics(self, dse.frontier)}
+        m = {"acc": acc, "spa": spa,
+             **frontier_hw_metrics(self, dse.frontier)}
+        if codes is not None and self.pattern_costs is not None:
+            m["meas"] = self._meas_term(layers)
+        return m
 
     def _metrics_batch(self, accs: np.ndarray, sw_meas: np.ndarray,
                        sa_meas: np.ndarray,
-                       swt_meas: Optional[np.ndarray]) -> List[Dict[str, float]]:
+                       swt_meas: Optional[np.ndarray],
+                       codes_rows: Optional[np.ndarray] = None
+                       ) -> List[Dict[str, float]]:
         """Batched ``_metrics`` tail: one ``dse_vec_batch`` call scores all
         measured-sparsity rows (the workload constants are per-layer dense
         facts — identical across rows — so one ``LayerVectors`` template +
         the stacked ``s_eff`` rows is the whole batch state). Bit-identical
-        to the per-row ``_metrics`` loop (property-tested)."""
+        to the per-row ``_metrics`` loop (property-tested). Pattern rows
+        whose decode ``t_scale`` vectors differ are grouped — one template
+        per distinct vector — because ``t_scale`` is a template constant,
+        not a per-row input; rows are independent, so grouping preserves
+        each row's result exactly."""
         B = len(accs)
         rows = [self._sparse_layers(sw_meas[b], sa_meas[b],
                                     swt_meas[b] if swt_meas is not None
-                                    else None) for b in range(B)]
-        lvs = [self.hw.layer_vectors(layers) for layers, _ in rows]
-        S = np.stack([lv.s_eff for lv in lvs])
-        dses = self.dse_cache.dse_vec_batch(lvs[0], self.hw, self.budget, S,
-                                            max_iters=self.dse_iters)
-        return [{"acc": float(accs[b]), "spa": rows[b][1],
-                 **frontier_hw_metrics(self, dses[b].frontier)}
+                                    else None,
+                                    codes=codes_rows[b]
+                                    if codes_rows is not None else None)
                 for b in range(B)]
+        lvs = [self.hw.layer_vectors(layers) for layers, _ in rows]
+        keys = [None if lv.t_scale is None else lv.t_scale.tobytes()
+                for lv in lvs]
+        dses: List = [None] * B
+        if len(set(keys)) == 1:
+            S = np.stack([lv.s_eff for lv in lvs])
+            dses = self.dse_cache.dse_vec_batch(lvs[0], self.hw,
+                                                self.budget, S,
+                                                max_iters=self.dse_iters)
+        else:
+            seen: List = []
+            for key in keys:
+                if key not in seen:
+                    seen.append(key)
+            for key in seen:
+                grp = [b for b in range(B) if keys[b] == key]
+                S = np.stack([lvs[b].s_eff for b in grp])
+                for b, dse in zip(grp, self.dse_cache.dse_vec_batch(
+                        lvs[grp[0]], self.hw, self.budget, S,
+                        max_iters=self.dse_iters)):
+                    dses[b] = dse
+        out = []
+        for b in range(B):
+            m = {"acc": float(accs[b]), "spa": rows[b][1],
+                 **frontier_hw_metrics(self, dses[b].frontier)}
+            if codes_rows is not None and self.pattern_costs is not None:
+                m["meas"] = self._meas_term(rows[b][0])
+            out.append(m)
+        return out
 
     def __call__(self, x: np.ndarray) -> Dict[str, float]:
         # 1-2) one-shot prune + accuracy proxy + measured act sparsity (jitted)
-        s_w, s_a = self._split(x)
-        acc, sw_meas, sa_meas, swt_meas = map(np.asarray,
-                                              self._eval(self.params, s_w, s_a))
+        acc, sw_meas, sa_meas, swt_meas, codes = self._eval_any(x)
         return self._metrics(float(acc), sw_meas, sa_meas,
-                             swt_meas if self.tiled else None)
+                             swt_meas if self.tiled else None,
+                             codes=codes)
 
     def evaluate_batch(self, xs: Sequence[np.ndarray]) -> List[Dict[str, float]]:
         """Score a batch of proposals with ONE vmapped prune+forward call;
@@ -674,26 +1143,42 @@ class CNNEvaluator:
         split = [self._split(x) for x in xs]
         s_w = jnp.stack([s for s, _ in split])
         s_a = jnp.stack([a for _, a in split])
+        pattern_eval = self.patterns is not None and self._needs_pattern_eval
+        codes_rows = np.stack([self._pattern_codes(x) for x in xs]) \
+            if self.patterns is not None else None
         # bucket rule: pad up to the smallest already-compiled shape in
         # [B, 2B] (a one-time compile beats repeated >2x padding waste, e.g.
         # a later smaller-batch search on a shared evaluator); otherwise
         # compile this exact size
         bigger = [s for s in self.batch_shapes if B <= s <= 2 * B]
         target = min(bigger) if bigger else B
+        codes_j = jnp.asarray(codes_rows, jnp.int32) if pattern_eval else None
         if B < target:
             pad = target - B
             s_w = jnp.concatenate(
                 [s_w, jnp.broadcast_to(s_w[-1], (pad,) + s_w.shape[1:])])
             s_a = jnp.concatenate(
                 [s_a, jnp.broadcast_to(s_a[-1], (pad,) + s_a.shape[1:])])
+            if pattern_eval:
+                codes_j = jnp.concatenate(
+                    [codes_j, jnp.broadcast_to(codes_j[-1],
+                                               (pad,) + codes_j.shape[1:])])
             self.padded_batches += 1
         self.batch_shapes.add(int(s_w.shape[0]))
-        accs, sw_meas, sa_meas, swt_meas = map(
-            np.asarray, self._eval_batch(self.params, s_w, s_a))
+        if pattern_eval:
+            accs, sw_meas, sa_meas, swt_meas = map(
+                np.asarray,
+                self._eval_p_batch(self.params, s_w, s_a, codes_j))
+        else:
+            accs, sw_meas, sa_meas, swt_meas = map(
+                np.asarray, self._eval_batch(self.params, s_w, s_a))
         if B > 1 and self.dse_cache is not None and self.batch_dse \
                 and self.dse_engine == "auto":
             return self._metrics_batch(accs[:B], sw_meas[:B], sa_meas[:B],
-                                       swt_meas[:B] if self.tiled else None)
+                                       swt_meas[:B] if self.tiled else None,
+                                       codes_rows=codes_rows)
         return [self._metrics(float(accs[b]), sw_meas[b], sa_meas[b],
-                              swt_meas[b] if self.tiled else None)
+                              swt_meas[b] if self.tiled else None,
+                              codes=codes_rows[b]
+                              if codes_rows is not None else None)
                 for b in range(B)]

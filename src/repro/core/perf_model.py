@@ -55,6 +55,9 @@ class LayerCost:
     s_w: float = 0.0              # weight sparsity (compile-time)
     s_a: float = 0.0              # activation sparsity (calibrated)
     s_w_tile: float = 0.0         # fraction of all-zero weight tiles (TPU skip)
+    pattern: str = "unstructured"  # sparsity pattern (pruning.PATTERNS §16)
+    t_scale: float = 1.0          # per-pattern decode-cost multiplier on the
+    #                               t_cycles numerator (1.0 = free skipping)
 
     @property
     def s_pair(self) -> float:
@@ -73,9 +76,15 @@ def pair_sparsity(s_w: float, s_a: float) -> float:
     return 1.0 - (1.0 - s_w) * (1.0 - s_a)
 
 
-def t_cycles(s_bar: float, M: int, N: int) -> int:
-    """Eq. 1: initiation interval of one SPE."""
-    return max(1, math.ceil((1.0 - s_bar) * M / max(N, 1)))
+def t_cycles(s_bar: float, M: int, N: int, scale: float = 1.0) -> int:
+    """Eq. 1: initiation interval of one SPE. ``scale`` is the per-pattern
+    decode-cost multiplier on the non-zero work (DESIGN.md §16) — the
+    default 1.0 takes the original expression path, so pre-pattern callers
+    are bit-identical."""
+    om = (1.0 - s_bar) * M
+    if scale != 1.0:
+        om = om * scale
+    return max(1, math.ceil(om / max(N, 1)))
 
 
 @dataclass
@@ -98,6 +107,10 @@ class LayerVectors:
     max_n: np.ndarray       # (L,) int64
     max_spe: np.ndarray     # (L,) int64
     res_unit: np.ndarray    # (L,) float64 — resource per (spe * macs_per_spe)
+    t_scale: "Optional[np.ndarray]" = None   # (L,) float64 per-pattern
+    #   decode-cost multiplier on the t_cycles numerator, or None (== all
+    #   ones, the pre-pattern path: every engine keeps the original float
+    #   expressions bit-for-bit; DESIGN.md §16)
 
     def __len__(self) -> int:
         return len(self.macs)
@@ -109,7 +122,8 @@ class HardwareModel:
 
     def layer_throughput(self, l: LayerCost, d: DesignPoint) -> float:
         """Eq. 2, in samples/cycle."""
-        t = t_cycles(self.effective_sparsity(l), l.m_dot, d.macs_per_spe)
+        t = t_cycles(self.effective_sparsity(l), l.m_dot, d.macs_per_spe,
+                     l.t_scale)
         return d.spe * l.m_dot / (l.macs * t) if l.macs else float("inf")
 
     def effective_sparsity(self, l: LayerCost) -> float:
@@ -142,14 +156,28 @@ class HardwareModel:
             max_spe=np.array([self.max_spe(l) for l in layers],
                              dtype=np.int64),
             res_unit=np.array([self.layer_resource(l, unit) for l in layers],
-                              dtype=np.float64))
+                              dtype=np.float64),
+            t_scale=self._t_scale_vec(layers))
+
+    @staticmethod
+    def _t_scale_vec(layers: Sequence[LayerCost]) -> Optional[np.ndarray]:
+        """Per-layer decode-cost multipliers, or None when every layer is
+        at the free-skipping default — the None sentinel keeps the engines,
+        the cache fingerprint, and the compiled-C dispatch on their exact
+        pre-pattern paths (DESIGN.md §16)."""
+        ts = [l.t_scale for l in layers]
+        if all(v == 1.0 for v in ts):
+            return None
+        return np.array(ts, dtype=np.float64)
 
     def throughput_vec(self, lv: LayerVectors, spe: np.ndarray,
                        n: np.ndarray) -> np.ndarray:
         """Eq. 1–2 over all layers at once; float-for-float identical to
         ``layer_throughput`` (same operation order, products < 2**53)."""
-        t = np.maximum(1.0, np.ceil((1.0 - lv.s_eff) * lv.m_dot
-                                    / np.maximum(n, 1)))
+        om = (1.0 - lv.s_eff) * lv.m_dot
+        if lv.t_scale is not None:
+            om = om * lv.t_scale
+        t = np.maximum(1.0, np.ceil(om / np.maximum(n, 1)))
         with np.errstate(divide="ignore"):
             thr = (spe * lv.m_dot) / (lv.macs * t)
         return np.where(lv.macs > 0, thr, np.inf)
@@ -193,7 +221,18 @@ class TPUModel(HardwareModel):
     chip_lanes: Optional[Sequence[float]] = None   # per-chip lane budgets
 
     def effective_sparsity(self, l: LayerCost) -> float:
-        return l.s_pair_tile if l.prunable else 0.0
+        """Per-pattern hardware-effective S̄ (DESIGN.md §16): the MXU skips
+        whole all-zero tiles for unstructured pruning (``s_w_tile``), but a
+        compile-time N:M / hierarchical structure is decodable at group
+        granularity — the structured decode path (cf. 2:4 sparse cores)
+        skips every structured zero, so those patterns spend the full
+        element sparsity ``s_w`` (paying their decode cost through
+        ``t_scale``). Activation sparsity never skips MXU compute."""
+        if not l.prunable:
+            return 0.0
+        if l.pattern in ("nm", "hierarchical"):
+            return l.s_w
+        return l.s_pair_tile
 
     def layer_resource(self, l: LayerCost, d: DesignPoint) -> float:
         return d.spe * d.macs_per_spe / MXU_TILE   # tile-lane occupancy

@@ -126,6 +126,79 @@ def tile_prune(w: jnp.ndarray, sparsity, bk: int = 128, bn: int = 128):
     return out, zero_frac
 
 
+# --------------------------------------------------------------------- #
+# Sparsity patterns (DESIGN.md §16): the pattern axis the search picks per
+# matrix kind. "unstructured" is the paper's element/tile pruner;
+# "nm" keeps N of every M consecutive weights along the reduction dim;
+# "hierarchical" composes tile-level pruning with intra-tile N:M
+# (HighLight-style); "activation" realizes the budget as runtime
+# activation clipping instead of weight zeros (SparseNN-style).
+# --------------------------------------------------------------------- #
+PATTERNS = ("unstructured", "nm", "hierarchical", "activation")
+
+#: group size M of the N:M patterns — 8 matches the sublane granularity a
+#: structured decoder indexes (achievable sparsity grid is k/8, k=0..7)
+NM_M = 8
+
+
+def nm_keep_for_sparsity(s, m: int = NM_M):
+    """Keep-count n of the largest achievable N:M grid point 1 - n/m <= s.
+    Jit-safe (``s`` may trace); never returns < 1 (a group always keeps at
+    least one weight, so the grid tops out at 1 - 1/m)."""
+    z = jnp.floor(jnp.clip(jnp.asarray(s), 0.0, 1.0) * m)
+    return jnp.clip(m - z, 1, m)
+
+
+def nm_sparsity_grid(s, m: int = NM_M):
+    """Realized sparsity 1 - n/m of ``nm_keep_for_sparsity`` — numpy-safe
+    (the analytic LM evaluator snaps targets with this)."""
+    s = np.clip(np.asarray(s, dtype=np.float64), 0.0, 1.0)
+    n = np.clip(m - np.floor(s * m), 1, m)
+    return 1.0 - n / m
+
+
+def nm_prune(w: jnp.ndarray, n, m: int = NM_M) -> jnp.ndarray:
+    """N:M structured pruning: within every group of ``m`` consecutive
+    weights along the reduction dim (rows of the (m_dot, cout) matmul view;
+    non-2D weights flatten leading dims like ``tile_prune``), keep the ``n``
+    largest-|w| and zero the rest. Exactly ``n`` survivors per group —
+    ties break to the lower row index (stable argsort), so ``sparsity_of``
+    on a dense input is exactly ``1 - n/m`` when the reduction dim divides
+    ``m``. Jit-safe (``n`` may trace: the keep test is a rank compare)."""
+    orig_shape = w.shape
+    w2 = w if w.ndim == 2 else w.reshape(-1, w.shape[-1])
+    K, N = w2.shape
+    pad = (-K) % m
+    wp = jnp.pad(w2, ((0, pad), (0, 0)))
+    g = wp.reshape(-1, m, N)                        # (groups, m, N)
+    a = jnp.abs(g)
+    order = jnp.argsort(-a, axis=1)                 # descending, stable
+    ranks = jnp.argsort(order, axis=1)              # rank of each element
+    keep = ranks < jnp.asarray(n)
+    out = (g * keep).reshape(K + pad, N)[:K]
+    return out.reshape(orig_shape)
+
+
+def hierarchical_prune(w: jnp.ndarray, tile_frac, n, m: int = NM_M,
+                       bk: int = 128, bn: int = 128):
+    """Hierarchical structured pruning (HighLight): tile-level pruning then
+    intra-tile N:M — literally the composition
+    ``nm_prune(tile_prune(w, tile_frac)[0], n, m)`` (the property-test
+    oracle). Zeroed tiles keep all-zero groups under N:M (zeros rank last),
+    so both levels survive in the output. Returns ``(pruned w, realized
+    all-zero-tile fraction)`` like ``tile_prune``."""
+    wt, ztile = tile_prune(w, tile_frac, bk=bk, bn=bn)
+    return nm_prune(wt, n, m), ztile
+
+
+def act_realize_pattern(s_w, s_a):
+    """Activation-pattern realization hook: the searched weight-axis budget
+    is spent as EXTRA runtime activation clipping (the weights stay dense).
+    Independent clip events compose like pair sparsity: the combined
+    activation target is 1 - (1-s_a)(1-s_w). numpy/jnp generic."""
+    return 1.0 - (1.0 - s_a) * (1.0 - s_w)
+
+
 def prune_params(params: Dict[str, Any],
                  sparsities: Dict[str, float],
                  match: Optional[Callable[[str], bool]] = None

@@ -5,6 +5,15 @@ Maximizes f(x) over a box [lo, hi]^D: after ``n_startup`` random trials,
 split observations at the γ-quantile into good/bad sets, fit diagonal Parzen
 (KDE) densities l(x), g(x), and pick the candidate maximizing l(x)/g(x)
 among ``n_ei`` samples drawn from l.
+
+Categorical dims (``cats``; DESIGN.md §16): a dim with cardinality k > 0
+lives on [lo, lo+k) and every proposal is snapped to a bin center
+``lo + floor(x - lo) + 0.5`` AFTER the continuous machinery runs — the
+quantization consumes no RNG, so a search with ``cats=None`` (the default)
+replays the pre-categorical stream bit-for-bit, and mixed spaces (some
+continuous, some categorical dims) need no special-case sampling: the KDE
+simply sees clustered bin centers and reproduces the classic
+one-Parzen-per-category TPE behavior in the limit.
 """
 from __future__ import annotations
 
@@ -22,13 +31,36 @@ class TPE:
     n_startup: int = 10
     n_ei: int = 48
     seed: int = 0
+    cats: Optional[np.ndarray] = None   # per-dim cardinality (0=continuous)
     xs: List[np.ndarray] = field(default_factory=list)
     ys: List[float] = field(default_factory=list)
 
     def __post_init__(self):
         self.lo = np.asarray(self.lo, float)
         self.hi = np.asarray(self.hi, float)
+        if self.cats is not None:
+            self.cats = np.asarray(self.cats, np.int64)
+            if len(self.cats) != len(self.lo):
+                raise ValueError(f"cats has {len(self.cats)} dims, "
+                                 f"box has {len(self.lo)}")
+            k = self.cats > 0
+            if not np.allclose(self.hi[k] - self.lo[k], self.cats[k]):
+                raise ValueError("categorical dims need hi - lo == "
+                                 "cardinality")
+            self._cat_mask = k
         self._rng = np.random.default_rng(self.seed)
+
+    def _snap(self, x: np.ndarray) -> np.ndarray:
+        """Quantize categorical dims to bin centers. Deterministic, no RNG
+        — the continuous path (``cats=None``) returns ``x`` untouched, so
+        the pre-categorical stream is bit-identical."""
+        if self.cats is None:
+            return x
+        k = self._cat_mask
+        x = np.array(x, float)
+        off = np.clip(x[k] - self.lo[k], 0.0, self.cats[k] - 1e-9)
+        x[k] = self.lo[k] + np.floor(off) + 0.5
+        return x
 
     @property
     def dim(self) -> int:
@@ -57,8 +89,8 @@ class TPE:
 
     def ask(self) -> np.ndarray:
         if len(self.xs) < self.n_startup:
-            return self._rng.uniform(self.lo, self.hi)
-        return self._propose(self._fit())
+            return self._snap(self._rng.uniform(self.lo, self.hi))
+        return self._snap(self._propose(self._fit()))
 
     def ask_batch(self, k: int,
                   liar: Optional[str] = None) -> List[np.ndarray]:
@@ -91,7 +123,8 @@ class TPE:
             raise ValueError(f"unknown liar mode {liar!r}")
         if liar is None or k <= 1 or not self.ys:
             if len(self.xs) < self.n_startup:
-                return [self._rng.uniform(self.lo, self.hi) for _ in range(k)]
+                return [self._snap(self._rng.uniform(self.lo, self.hi))
+                        for _ in range(k)]
             # one array program per wave (DESIGN.md §15): candidates are
             # drawn member by member (identical RNG stream to k serial
             # ``_propose`` calls) but all k * n_ei are SCORED in one KDE
@@ -106,7 +139,8 @@ class TPE:
             allc = np.concatenate(cands)
             score = (self._log_kde(allc, good, bw_good) -
                      self._log_kde(allc, bad, bw_bad)).reshape(k, self.n_ei)
-            return [cands[i][int(np.argmax(score[i]))] for i in range(k)]
+            return [self._snap(cands[i][int(np.argmax(score[i]))])
+                    for i in range(k)]
         lie = {"min": min(self.ys), "mean": float(np.mean(self.ys)),
                "max": max(self.ys)}[liar]
         real_xs, real_ys = self.xs, self.ys
@@ -119,9 +153,9 @@ class TPE:
                 # a pre-startup batch stays all-uniform exactly like the
                 # legacy mode (same RNG consumption per member)
                 if n_real < self.n_startup:
-                    x = self._rng.uniform(self.lo, self.hi)
+                    x = self._snap(self._rng.uniform(self.lo, self.hi))
                 else:
-                    x = self._propose(self._fit())
+                    x = self._snap(self._propose(self._fit()))
                 out.append(x)
                 if i + 1 < k:
                     self.xs.append(np.asarray(x, float))

@@ -41,6 +41,21 @@ def _build_tile_schedule_ref(mask: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     return counts, indices
 
 
+def tile_mask(w: np.ndarray, bk: int = 128, bn: int = 128) -> np.ndarray:
+    """(K, N) weight -> (Kt, Nt) bool map of tiles with any non-zero entry.
+
+    The bridge from a pruned weight to ``build_tile_schedule``: pattern
+    pruning (tile / N:M / hierarchical, DESIGN.md §16) produces element
+    zeros; the Pallas kernel skips at VMEM-tile granularity, so only tiles
+    that pruning emptied *entirely* shorten the schedule.
+    """
+    w = np.asarray(w)
+    K, N = w.shape
+    assert K % bk == 0 and N % bn == 0, (w.shape, bk, bn)
+    t = w.reshape(K // bk, bk, N // bn, bn)
+    return (t != 0).any(axis=(1, 3))
+
+
 # schedule memo: a weight is pruned once and multiplied every step, and
 # several layers often share one mask shape+pattern (tile-structured
 # pruning is deterministic), so schedules are cached per mask content

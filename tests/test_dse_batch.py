@@ -217,3 +217,112 @@ def test_lm_evaluate_batch_bit_exact_vs_serial_calls():
     xs = [rng.uniform(0, 0.9, ev_a.n_search) for _ in range(5)]
     assert [ev_a(x) for x in xs] == ev_b.evaluate_batch(xs)
     assert ev_b.dse_cache.stats()["cold_runs"] <= 5
+
+
+# --------------------------------------------------------------------- #
+# Sparsity-pattern axis (DESIGN.md §16): degenerate axis replays the
+# pre-pattern LM transcript bit for bit, serial AND batched; the full
+# axis stays batch==serial exact (the LM evaluator is analytic).
+# --------------------------------------------------------------------- #
+def _lm_pair(hw_name, patterns, **kw):
+    from repro.core.hass import LMEvaluator
+    from repro.core.perf_model import FPGAModel, TPUModel
+    from repro.configs import get_config
+
+    cfg = get_config("qwen3-0.6b")
+    if hw_name == "tpu":
+        hw = TPUModel(chips=1)
+        budget = hw.budget
+    else:
+        hw, budget = FPGAModel(), 4096.0
+    base = LMEvaluator(cfg, hw, budget, dse_iters=120, **kw)
+    pat = LMEvaluator(cfg, hw, budget, dse_iters=120, patterns=patterns,
+                      **kw)
+    return base, pat
+
+
+@pytest.mark.parametrize("hw_name", ["tpu", "fpga"])
+def test_lm_unstructured_only_pattern_axis_bit_identical(hw_name):
+    from repro.core.hass import hass_search
+
+    base, pat = _lm_pair(hw_name, ("unstructured",))
+    assert pat.n_pattern_dims == 0
+    kw = dict(iters=8, seed=3, include_act=False)
+    r0 = hass_search(base, base.n_search, **kw)
+    r1 = hass_search(pat, pat.n_search, **kw)
+    for t0, t1 in zip(r0.trials, r1.trials):
+        assert np.array_equal(t0.x, t1.x)
+        assert t0.metrics == t1.metrics
+        assert t0.score == t1.score
+    assert r0.best_score == r1.best_score
+
+
+def test_lm_unstructured_only_pattern_axis_bit_identical_batched():
+    from repro.core.hass import hass_search
+
+    base, pat = _lm_pair("tpu", ("unstructured",))
+    kw = dict(iters=10, seed=4, include_act=False, batch_size=4)
+    r0 = hass_search(base, base.n_search, **kw)
+    r1 = hass_search(pat, pat.n_search, **kw)
+    assert len(r0.trials) == len(r1.trials) == 10
+    for t0, t1 in zip(r0.trials, r1.trials):
+        assert np.array_equal(t0.x, t1.x)
+        assert t0.metrics == t1.metrics
+
+
+def test_lm_pattern_evaluate_batch_exact_vs_serial():
+    all_p = ("unstructured", "nm", "hierarchical", "activation")
+    _, ev_a = _lm_pair("tpu", all_p)
+    _, ev_b = _lm_pair("tpu", all_p)
+    assert ev_a.n_pattern_dims == ev_a.n_search
+    rng = np.random.default_rng(9)
+    n = ev_a.n_search
+    xs = [np.concatenate([rng.uniform(0, 0.9, n),
+                          rng.integers(0, 4, n).astype(np.float64) + 0.5])
+          for _ in range(6)]
+    assert [ev_a(x) for x in xs] == ev_b.evaluate_batch(xs)
+
+
+def test_lm_pattern_search_with_measured_costs_emits_meas():
+    from repro.core.hass import Lambdas, hass_search
+
+    costs = {"unstructured": 1.0, "nm": 2.2, "hierarchical": 1.8,
+             "activation": 1.0}
+    _, ev = _lm_pair("tpu", ("unstructured", "nm", "hierarchical",
+                             "activation"), pattern_costs=costs)
+    r = hass_search(ev, ev.n_search, iters=8, seed=0, include_act=False,
+                    lambdas=Lambdas(meas=0.1))
+    assert len(r.trials) == 8
+    for t in r.trials:
+        assert len(t.x) == 2 * ev.n_search
+        assert "meas" in t.metrics and t.metrics["meas"] >= 0.0
+    # the patterned stack threads t_scale through the DSE: nm/hierarchical
+    # layers carry a decode-cost multiplier > 1
+    x = np.concatenate([np.full(ev.n_search, 0.5),
+                        np.full(ev.n_search, 1.5)])      # all-nm codes
+    layers = ev.sparse_layers(x)
+    pr = [l for l in layers if l.prunable]
+    assert all(l.pattern == "nm" for l in pr)
+    assert all(l.t_scale == costs["nm"] for l in pr)
+
+
+def test_hass_search_x0_anchor_trial():
+    """x0 is evaluated as trial 0, consumes one iter, and anchors both the
+    serial and batched loops; None keeps the pre-anchor stream untouched
+    (covered by the bit-identity tests above)."""
+    from repro.core.hass import hass_search
+
+    base, _ = _lm_pair("tpu", ("unstructured",))
+    n = base.n_search
+    x0 = np.zeros(n)
+    r = hass_search(base, n, iters=6, seed=5, include_act=False, x0=x0)
+    assert len(r.trials) == 6
+    assert np.array_equal(r.trials[0].x, x0)
+    assert r.trials[0].metrics["acc"] == 1.0
+    rb = hass_search(base, n, iters=6, seed=5, include_act=False, x0=x0,
+                     batch_size=4)
+    assert len(rb.trials) == 6
+    assert np.array_equal(rb.trials[0].x, x0)
+    with pytest.raises(ValueError):
+        hass_search(base, n, iters=4, seed=5, include_act=False,
+                    x0=np.zeros(n + 3))

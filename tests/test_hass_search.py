@@ -235,6 +235,96 @@ def test_hw_aware_search_beats_software_only(evaluator):
     assert all(b >= a - 1e-12 for a, b in zip(rb, rb[1:]))
 
 
+# --------------------------------------------------------------------- #
+# Sparsity-pattern axis regressions (DESIGN.md §16): the degenerate
+# pattern axis must replay the pre-pattern code path bit for bit.
+# --------------------------------------------------------------------- #
+def _cnn_pair(patterns):
+    cfg = reduce_config(RESNET18)
+    params = cnn.init_params(cfg, RNG)
+    images = jax.random.normal(RNG, (8, cfg.img_res, cfg.img_res, 3))
+    base = CNNEvaluator(cfg, params, images, FPGAModel(), budget=4096,
+                        dse_iters=150)
+    pat = CNNEvaluator(cfg, params, images, FPGAModel(), budget=4096,
+                       dse_iters=150, patterns=patterns)
+    return base, pat
+
+
+def test_cnn_unstructured_only_pattern_axis_is_bit_identical_serial():
+    """patterns=("unstructured",) adds no TPE dims and routes through the
+    seed pruner — the whole search transcript is trial-for-trial identical
+    to patterns=None."""
+    base, pat = _cnn_pair(("unstructured",))
+    assert pat.n_pattern_dims == 0
+    kw = dict(iters=5, s_max=0.9, seed=1)
+    r0 = hass_search(base, len(base.prunable), **kw)
+    r1 = hass_search(pat, len(pat.prunable), **kw)
+    for t0, t1 in zip(r0.trials, r1.trials):
+        assert np.array_equal(t0.x, t1.x)
+        assert t0.metrics == t1.metrics
+        assert t0.score == t1.score
+    assert r0.best_score == r1.best_score
+
+
+def test_cnn_unstructured_only_pattern_axis_is_bit_identical_batched():
+    base, pat = _cnn_pair(("unstructured",))
+    kw = dict(iters=6, s_max=0.9, seed=2, batch_size=3)
+    r0 = hass_search(base, len(base.prunable), **kw)
+    r1 = hass_search(pat, len(pat.prunable), **kw)
+    for t0, t1 in zip(r0.trials, r1.trials):
+        assert np.array_equal(t0.x, t1.x)
+        assert t0.metrics == t1.metrics
+
+
+def test_cnn_pattern_search_picks_patterns_and_emits_meas():
+    """Full pattern axis: the TPE gets one categorical dim per prunable
+    layer, trials carry per-layer pattern codes, and with pattern_costs the
+    measured Eq. 6 term appears in every metrics dict."""
+    from repro.core.perf_model import TPUModel
+    cfg = reduce_config(RESNET18)
+    params = cnn.init_params(cfg, RNG)
+    images = jax.random.normal(RNG, (4, cfg.img_res, cfg.img_res, 3))
+    tpu = TPUModel()
+    costs = {"unstructured": 1.0, "nm": 2.2, "hierarchical": 1.8,
+             "activation": 1.0}
+    ev = CNNEvaluator(cfg, params, images, tpu, budget=tpu.chip_budget,
+                      dse_iters=100, patterns=("unstructured", "nm",
+                                               "hierarchical", "activation"),
+                      pattern_costs=costs)
+    L = len(ev.prunable)
+    assert ev.n_pattern_dims == L
+    r = hass_search(ev, L, iters=4, s_max=0.9, seed=0,
+                    lambdas=Lambdas(meas=0.1))
+    assert len(r.trials) == 4
+    for t in r.trials:
+        # s_w dims + s_a dims (include_act default) + pattern dims
+        assert len(t.x) == 3 * L
+        codes = t.x[-L:]
+        assert np.all((codes >= 0) & (codes < 4))
+        assert "meas" in t.metrics and t.metrics["meas"] >= 0.0
+    # patterned layers are labeled on the LayerCost stack
+    layers = ev.sparse_layers(r.best_x)
+    names = {l.pattern for l in layers if l.prunable}
+    assert names <= {"unstructured", "nm", "hierarchical", "activation"}
+
+
+def test_cnn_pattern_evaluate_batch_matches_serial():
+    base, ev = _cnn_pair(("unstructured", "nm", "hierarchical"))
+    del base
+    L = len(ev.prunable)
+    rng = np.random.default_rng(5)
+    xs = []
+    for _ in range(3):
+        x = np.concatenate([rng.uniform(0.0, 0.8, L),
+                            rng.integers(0, 3, L).astype(np.float64) + 0.5])
+        xs.append(x)
+    batch = ev.evaluate_batch(xs)
+    for x, mb in zip(xs, batch):
+        ms = ev(x)
+        for k in ms:
+            assert mb[k] == pytest.approx(ms[k], rel=1e-3, abs=1e-6), k
+
+
 def test_cnn_tpu_path_derives_s_w_tile_from_pruned_weights():
     """On a TPUModel the CNN evaluator prunes tile-structured and MEASURES
     s_w_tile on the pruned weights (ROADMAP item; DESIGN.md §12) — no

@@ -129,3 +129,65 @@ def test_schedule_cache_is_bounded():
     for _ in range(bsm._SCHEDULE_CACHE_MAX + 10):
         build_tile_schedule(rng.random((6, 6)) < 0.5)
     assert len(bsm._SCHEDULE_CACHE) <= bsm._SCHEDULE_CACHE_MAX
+
+
+# --------------------------------------------------------------------- #
+# Pattern-pruned weights through the schedule + kernel (DESIGN.md §16)
+# --------------------------------------------------------------------- #
+def _patterned_weight(kind, seed, K=384, N=256):
+    from repro.core import pruning
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    if kind == "nm":
+        # tile-level zeros first so N:M pruning leaves all-zero tiles for
+        # the schedule to skip, then the N:M grid on what's left
+        wt, _ = pruning.tile_prune(w, 0.4)
+        return pruning.nm_prune(wt, 4)
+    if kind == "hierarchical":
+        return pruning.hierarchical_prune(w, 0.5, 3)[0]
+    wt, _ = pruning.tile_prune(w, 0.5)
+    return wt
+
+
+@pytest.mark.parametrize("kind", ["unstructured", "nm", "hierarchical"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_patterned_mask_schedule_matches_reference(kind, seed):
+    """build_tile_schedule on masks of N:M- and hierarchically-pruned
+    weights == the per-column reference loop — the pattern pruners produce
+    ordinary tile masks, nothing schedule-special."""
+    from repro.kernels.block_sparse_matmul import (_build_tile_schedule_ref,
+                                                   tile_mask)
+    w = _patterned_weight(kind, seed)
+    mask = tile_mask(np.asarray(w))
+    c1, i1 = build_tile_schedule(mask)
+    c2, i2 = _build_tile_schedule_ref(mask)
+    assert np.array_equal(c1, c2) and np.array_equal(i1, i2)
+    if kind != "nm":
+        assert (c1 < mask.shape[0]).any()      # something actually skipped
+
+
+@pytest.mark.parametrize("kind", ["nm", "hierarchical"])
+def test_block_sparse_matmul_on_patterned_weights(kind):
+    """The winning pattern's schedule EXECUTES: kernel output on a pruned
+    weight == dense jnp reference on the same (element-sparse) weight."""
+    from repro.kernels.block_sparse_matmul import (block_sparse_matmul,
+                                                   build_tile_schedule,
+                                                   tile_mask)
+    w = _patterned_weight(kind, 3)
+    x = jnp.asarray(RNG.normal(size=(128, w.shape[0])), jnp.float32)
+    counts, indices = build_tile_schedule(tile_mask(np.asarray(w)))
+    out = block_sparse_matmul(x, w, jnp.asarray(counts),
+                              jnp.asarray(indices), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_tile_mask_shape_and_content():
+    from repro.kernels.block_sparse_matmul import tile_mask
+    w = np.zeros((256, 256), np.float32)
+    w[130, 5] = 1.0                            # one element in tile (1, 0)
+    mask = tile_mask(w)
+    assert mask.shape == (2, 2)
+    assert mask.tolist() == [[False, False], [True, False]]
+    with pytest.raises(AssertionError):
+        tile_mask(np.zeros((100, 256), np.float32))

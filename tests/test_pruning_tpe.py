@@ -154,6 +154,142 @@ def test_tile_prune_zero_target_is_identity():
     assert float(frac) == 0.0
 
 
+# --------------------------------------------------------------------- #
+# Sparsity-pattern axis: N:M / hierarchical pruners (DESIGN.md §16)
+# --------------------------------------------------------------------- #
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 8), rows=st.integers(1, 40), cols=st.integers(1, 24),
+       seed=st.integers(0, 1000))
+def test_property_nm_prune_group_budget(n, rows, cols, seed):
+    """Every M-group along the reduction dim keeps at most N nonzeros —
+    for any shape, including ragged K (zero-padded groups)."""
+    m = pruning.NM_M
+    w = jnp.asarray(np.random.default_rng(seed).normal(size=(rows, cols)),
+                    jnp.float32)
+    w2 = np.asarray(pruning.nm_prune(w, n))
+    pad = (-rows) % m
+    g = np.pad(w2, ((0, pad), (0, 0))).reshape(-1, m, cols)
+    per_group = (g != 0).sum(axis=1)
+    assert per_group.max() <= n
+    # within each group, kept magnitudes dominate dropped ones
+    a = np.abs(np.pad(np.asarray(w), ((0, pad), (0, 0))).reshape(-1, m, cols))
+    kept = g != 0
+    for j in range(cols):
+        for gi in range(a.shape[0]):
+            k, d = a[gi, kept[gi, :, j], j], a[gi, ~kept[gi, :, j], j]
+            if len(k) and len(d):
+                assert k.min() >= d.max() - 1e-7
+
+
+def test_nm_prune_exact_sparsity_on_dense_input():
+    """sparsity_of == exactly 1 - N/M for dense inputs with K % M == 0."""
+    m = pruning.NM_M
+    w = jnp.asarray(RNG.normal(size=(16 * m, 32)) + 10.0, jnp.float32)
+    for n in range(1, m + 1):
+        w2 = pruning.nm_prune(w, n)
+        assert float(pruning.sparsity_of(w2)) == \
+            pytest.approx(1.0 - n / m, abs=1e-7)
+
+
+def test_nm_keep_and_grid_consistency():
+    m = pruning.NM_M
+    for s in np.linspace(0.0, 1.0, 33):
+        n = int(pruning.nm_keep_for_sparsity(s))
+        assert 1 <= n <= m
+        grid = float(pruning.nm_sparsity_grid(s))
+        assert grid == pytest.approx(1.0 - n / m)
+        assert grid <= s + 1e-9   # snap never overshoots the target
+
+
+def test_nm_prune_traced_n_matches_static():
+    """The CNN pattern path traces n through jit — same zeros either way."""
+    w = jnp.asarray(RNG.normal(size=(64, 32)), jnp.float32)
+    f = jax.jit(pruning.nm_prune)
+    for n in (1, 3, 8):
+        assert np.array_equal(np.asarray(f(w, jnp.int32(n))),
+                              np.asarray(pruning.nm_prune(w, n)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(tile_frac=st.floats(0.0, 0.9), n=st.integers(1, 8),
+       seed=st.integers(0, 100))
+def test_property_hierarchical_equals_tile_then_nm(tile_frac, n, seed):
+    """Composition oracle: hierarchical_prune == nm_prune ∘ tile_prune."""
+    w = jnp.asarray(np.random.default_rng(seed).normal(size=(256, 256)),
+                    jnp.float32)
+    got, ztile = pruning.hierarchical_prune(w, tile_frac, n)
+    wt, ztile_ref = pruning.tile_prune(w, tile_frac)
+    ref = pruning.nm_prune(wt, n)
+    assert float(ztile) == float(ztile_ref)
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 7), seed=st.integers(0, 1000))
+def test_property_nm_dominated_by_unstructured_magnitude(n, seed):
+    """Anything N:M keeps that equal-budget unstructured pruning drops must
+    sit at or below the smallest magnitude unstructured keeps — the
+    structure tax only ever swaps in SMALLER weights, never larger."""
+    w = np.random.default_rng(seed).normal(size=(8 * 16, 24))
+    w2 = np.asarray(pruning.nm_prune(jnp.asarray(w, jnp.float32), n))
+    kept_p = w2 != 0
+    k = int(kept_p.sum())
+    a = np.abs(w).ravel()
+    order = np.argsort(-a, kind="stable")
+    kept_u = np.zeros(a.size, bool)
+    kept_u[order[:k]] = True            # global top-k at the same budget
+    kept_u = kept_u.reshape(w.shape)
+    swapped_in = kept_p & ~kept_u
+    if swapped_in.any():
+        assert np.abs(w)[swapped_in].max() <= np.abs(w)[kept_u].min() + 1e-7
+
+
+def test_act_realize_pattern_combines_rates():
+    assert pruning.act_realize_pattern(0.0, 0.3) == pytest.approx(0.3)
+    assert pruning.act_realize_pattern(0.5, 0.5) == pytest.approx(0.75)
+    assert pruning.act_realize_pattern(0.2, 0.0) == pytest.approx(0.2)
+
+
+# --------------------------------------------------------------------- #
+# TPE categorical dims (DESIGN.md §16)
+# --------------------------------------------------------------------- #
+def test_tpe_categorical_snaps_to_bin_centers():
+    t = TPE(lo=np.array([0.0, 0.0]), hi=np.array([0.9, 4.0]),
+            seed=5, cats=np.array([0, 4]))
+    centers = {0.5, 1.5, 2.5, 3.5}
+    seen = set()
+    for _ in range(50):
+        x = t.ask()
+        assert x[1] in centers
+        seen.add(x[1])
+        t.tell(x, -abs(x[1] - 2.5) + x[0])
+    for x in t.ask_batch(6, liar="min") + t.ask_batch(6):
+        assert x[1] in centers
+    assert len(seen) >= 3          # the axis is actually explored
+
+
+def test_tpe_cats_none_replays_pre_categorical_stream():
+    """cats=None must be bit-identical to a TPE without the feature — the
+    snap consumes no RNG and never touches continuous dims."""
+    a = TPE(lo=np.zeros(3), hi=np.ones(3), seed=11)
+    b = TPE(lo=np.zeros(3), hi=np.ones(3), seed=11, cats=None)
+    for _ in range(30):
+        xa, xb = a.ask(), b.ask()
+        assert np.array_equal(xa, xb)
+        y = float(np.sum(xa))
+        a.tell(xa, y)
+        b.tell(xb, y)
+    for xa, xb in zip(a.ask_batch(5, liar="min"), b.ask_batch(5, liar="min")):
+        assert np.array_equal(xa, xb)
+
+
+def test_tpe_cats_validation():
+    with pytest.raises(ValueError):
+        TPE(lo=np.zeros(2), hi=np.ones(2), cats=np.array([2, 0]))
+    with pytest.raises(ValueError):
+        TPE(lo=np.zeros(2), hi=np.ones(2), cats=np.array([0]))
+
+
 def test_tile_prune_non_2d_weights_flatten_leading_dims():
     import jax.numpy as jnp
     rng = np.random.default_rng(4)
