@@ -39,7 +39,7 @@ from repro.sim.slo import SLO, autoscale_policy_search
 from repro.sim.trace import Trace, backlogged_trace
 
 _REPORT_FIELDS = ("completions", "latency", "busy", "blocked", "idle",
-                  "queue_mean", "queue_max")
+                  "queue_mean", "queue_max", "down")
 
 
 def _identical(a, b) -> bool:

@@ -19,17 +19,18 @@ def main() -> None:
                     help="paper-budget searches (96 TPE iters)")
     ap.add_argument("--only", default=None,
                     help="comma list: kernels,fig4,fig6,fig5,fig1,table2,"
-                         "roofline,dse,lm_dse,search,sim,fleet,sparsity")
+                         "roofline,dse,lm_dse,search,sim,fleet,sparsity,"
+                         "chaos")
     args = ap.parse_args()
     iters = 96 if args.full else 10
     t2_iters = 24 if args.full else 8
     smoke = not args.full
 
-    from benchmarks import (dse_bench, fig1_frontier, fig4_dse_allocation,
-                            fig5_search_compare, fig6_speedup, fleet_bench,
-                            kernels_bench, lm_dse_bench, roofline_report,
-                            search_bench, sim_bench, sparsity_bench,
-                            table2_models)
+    from benchmarks import (chaos_bench, dse_bench, fig1_frontier,
+                            fig4_dse_allocation, fig5_search_compare,
+                            fig6_speedup, fleet_bench, kernels_bench,
+                            lm_dse_bench, roofline_report, search_bench,
+                            sim_bench, sparsity_bench, table2_models)
     jobs = [
         ("kernels", lambda: kernels_bench.run()),
         ("fig4", lambda: fig4_dse_allocation.run()),
@@ -45,6 +46,7 @@ def main() -> None:
         ("sim", lambda: sim_bench.run(smoke=smoke)),
         ("fleet", lambda: fleet_bench.run(smoke=smoke)),
         ("sparsity", lambda: sparsity_bench.run(smoke=smoke)),
+        ("chaos", lambda: chaos_bench.run(smoke=smoke)),
     ]
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

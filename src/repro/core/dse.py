@@ -1216,6 +1216,62 @@ def incremental_dse_batch(lv: LayerVectors, hw: HardwareModel,
     return out
 
 
+@dataclass
+class DegradationRung:
+    """One step of a graceful-degradation ladder: serve at extra sparsity
+    ``s_extra`` on top of the searched masks, trading accuracy for the
+    throughput of the correspondingly re-searched accelerator. ``step_scale``
+    is the decode step-cycle multiplier relative to rung 0 (``thr_base /
+    thr_rung``, so faster rungs have smaller scales) — the value
+    ``serve.fleet.DegradationPolicy`` consumes."""
+    s_extra: float       # extra sparsity fraction composed onto s_eff
+    throughput: float    # DSE pipeline throughput at this rung (samples/cyc)
+    step_scale: float    # step-cycle multiplier vs rung 0 (<= 1.0)
+
+
+def degradation_ladder(layers: Sequence[LayerCost], hw: HardwareModel,
+                       budget: float,
+                       *, s_extra: Sequence[float] = (0.0, 0.15, 0.3),
+                       max_iters: int = 10000,
+                       engine: str = "auto") -> List[DegradationRung]:
+    """Price a graceful-degradation ladder off the sparsity frontier.
+
+    Rung ``k`` composes ``s_extra[k]`` of additional sparsity onto every
+    layer's hardware-effective density — ``s' = 1 - (1 - s_eff) * (1 -
+    e)`` — and re-runs the batched DSE on the stepped-up stacks in ONE
+    ``incremental_dse_batch`` call (rows share the workload template, so
+    the lockstep engines amortize the sweep). The returned rungs map each
+    accuracy step-down to its measured throughput gain as a step-cycle
+    multiplier; feed ``tuple(r.step_scale for r in rungs)`` to
+    ``DegradationPolicy(ladder=...)``. ``s_extra`` must start at 0.0
+    (rung 0 is the undegraded operating point; its scale is exactly 1.0)
+    and increase strictly; scales are clamped monotone nonincreasing so a
+    non-monotone greedy-DSE wobble can never produce a ladder the policy
+    validator rejects."""
+    grid = [float(e) for e in s_extra]
+    if not grid or grid[0] != 0.0:
+        raise ValueError("degradation_ladder: s_extra must start at 0.0")
+    if any(b <= a for a, b in zip(grid, grid[1:])):
+        raise ValueError("degradation_ladder: s_extra must increase strictly")
+    if any(e < 0.0 or e >= 1.0 for e in grid):
+        raise ValueError("degradation_ladder: s_extra must lie in [0, 1)")
+    lv = hw.layer_vectors(layers)
+    batch = np.stack([1.0 - (1.0 - lv.s_eff) * (1.0 - e) for e in grid])
+    results = incremental_dse_batch(lv, hw, budget, batch,
+                                    max_iters=max_iters,
+                                    materialize_designs=False, engine=engine)
+    thr0 = results[0].throughput
+    rungs: List[DegradationRung] = []
+    floor = 1.0
+    for e, r in zip(grid, results):
+        scale = 1.0 if e == 0.0 else (
+            thr0 / r.throughput if r.throughput > 0.0 else 1.0)
+        floor = min(floor, scale)
+        rungs.append(DegradationRung(s_extra=e, throughput=r.throughput,
+                                     step_scale=floor))
+    return rungs
+
+
 def incremental_dse(layers: Sequence[LayerCost], hw: HardwareModel,
                     budget: float, *, max_iters: int = 10000,
                     engine: str = "auto") -> DSEResult:
@@ -1655,6 +1711,9 @@ class PartitionResult:
     #                                 (heterogeneous slices; DESIGN.md §13)
     sim_report: Optional[object] = None   # SimReport of the winning
     #                                 candidate when objective="slo"
+    fault_reports: Optional[List[object]] = None  # per-fault-scenario
+    #                                 SimReports of the winner when the SLO
+    #                                 search ran with a fault set
 
 
 def boundary_activations(layers: Sequence[LayerCost], cut: int) -> float:

@@ -38,6 +38,19 @@ from repro.sim.trace import bucket_sizes
 DEFAULT_BUCKETS = (8, 16, 32, 64)
 
 
+def _norm_step_schedule(step_schedule):
+    """Normalize degradation breakpoints to sorted parallel lists
+    ``(times, scales)``; scale is the rung's relative decode-step cost
+    (1.0 = the base operating point). Shared by ``serve_open_loop`` and
+    its timing twin ``fleet.open_loop_schedule``."""
+    if not step_schedule:
+        return [], []
+    rows = sorted((float(bt), float(bs)) for bt, bs in step_schedule)
+    if any(bs <= 0 for _, bs in rows):
+        raise ValueError("step_schedule scales must be positive")
+    return [bt for bt, _ in rows], [bs for _, bs in rows]
+
+
 def make_serve_step(api: ModelAPI) -> Callable:
     """(params, cache, token (B,1)) -> (logits (B,1,V), cache)."""
     def serve_step(params, cache, token):
@@ -56,10 +69,14 @@ class Request:
     """One serving request. ``arrival`` is the trace timestamp (cycles;
     0 for closed-loop use) and ``out`` collects the generated tokens —
     filled in place by ``generate``/``replay_trace``/``serve_open_loop``
-    so callers get per-request outputs without positional bookkeeping."""
+    so callers get per-request outputs without positional bookkeeping.
+    ``deadline`` is an absolute cycle timestamp: a request whose
+    admission round opens after its deadline is *shed* (counted in
+    ``ServeReport.shed``) instead of serving arbitrarily-late work."""
     prompt: np.ndarray
     max_new: int = 16
     arrival: float = 0.0
+    deadline: float = float("inf")
     out: List[int] = field(default_factory=list)
 
 
@@ -81,7 +98,10 @@ class ServeReport:
     """Per-request accounting of one open-loop serving run. All times are
     virtual-clock cycles, so the arrays line up with ``SimReport``'s:
     ``latency = completions - arrivals`` and ``queue_wait = admissions -
-    arrivals`` (time spent waiting for a batch slot)."""
+    arrivals`` (time spent waiting for a batch slot). Shed requests
+    (deadline passed before their admission round) carry
+    ``completions = inf`` and are excluded from the latency percentiles;
+    ``admissions == completions + shed`` by construction."""
     arrivals: np.ndarray          # (N,)
     admissions: np.ndarray        # (N,) prefill joined the running batch
     completions: np.ndarray       # (N,) bucket boundary the request left at
@@ -90,17 +110,32 @@ class ServeReport:
     outputs: List[List[int]]
     decode_steps: int = 0         # model decode calls issued
     prefills: int = 0             # admission prefill calls issued
+    shed_mask: np.ndarray = None  # (N,) True = dropped at its deadline
+    switch_stalls: int = 0        # degradation rung switches charged
+
+    def __post_init__(self):
+        if self.shed_mask is None:
+            self.shed_mask = np.zeros(len(self.arrivals), dtype=bool)
 
     @property
     def completed(self) -> int:
-        return len(self.completions)
+        return int((~self.shed_mask).sum())
+
+    @property
+    def shed(self) -> int:
+        return int(self.shed_mask.sum())
 
     @property
     def horizon(self) -> float:
-        return float(self.completions.max()) if self.completed else 0.0
+        served = self.completions[~self.shed_mask]
+        return float(served.max()) if len(served) else 0.0
 
     def latency_percentile(self, quantile: float) -> float:
-        return float(np.percentile(self.latency, quantile))
+        lat = self.latency[~self.shed_mask]
+        if len(lat) == 0:
+            raise ValueError(
+                "latency_percentile on a report with zero completions")
+        return float(np.percentile(lat, quantile))
 
     @property
     def p50(self) -> float:
@@ -232,8 +267,9 @@ class ServeSession:
 
     def serve_open_loop(self, requests: Sequence[Request], *,
                         step_cycles: float, prefill_cycles: float = 0.0,
-                        buckets: Sequence[int] = DEFAULT_BUCKETS
-                        ) -> ServeReport:
+                        buckets: Sequence[int] = DEFAULT_BUCKETS,
+                        step_schedule: Optional[Sequence] = None,
+                        switch_cycles: float = 0.0) -> ServeReport:
         """Open-loop continuous batching driven by arrival timestamps.
 
         Waiting requests are admitted into free batch slots only at
@@ -248,7 +284,18 @@ class ServeSession:
         equals a bucket this issues exactly ``generate``'s model-call
         sequence, so greedy outputs match bit for bit (property-tested).
         ``fleet.open_loop_schedule`` is this method's pure-timing twin —
-        keep the two in lockstep."""
+        keep the two in lockstep.
+
+        A request whose ``deadline`` has passed when its admission round
+        opens is *shed* (no prefill, no slot; ``shed_mask`` set,
+        ``completions = inf``) — stale work is dropped, not served late.
+
+        ``step_schedule`` is the graceful-degradation hook (DESIGN.md
+        §17): sorted ``(t, scale)`` breakpoints after which a decode step
+        costs ``scale * step_cycles`` (a sparsity-frontier rung's relative
+        step time). Crossing a breakpoint while actively serving charges
+        ``switch_cycles`` once — the temporal partition-switch stall; an
+        idle executor re-points silently."""
         reqs = list(requests)
         n = len(reqs)
         b = np.sort(np.asarray(list(buckets), dtype=np.int64))
@@ -262,24 +309,41 @@ class ServeSession:
         if alive:
             quota[alive] = bucket_sizes([reqs[i].max_new for i in alive], b)
         arrivals = np.array([r.arrival for r in reqs], dtype=np.float64)
+        dl = np.array([r.deadline for r in reqs], dtype=np.float64)
         admissions = np.zeros(n, dtype=np.float64)
         completions = np.zeros(n, dtype=np.float64)
         done = np.zeros(n, dtype=bool)
+        shed_mask = np.zeros(n, dtype=bool)
         outputs: List[List[int]] = [[] for _ in range(n)]
         waiting = deque(order)
         groups: List[dict] = []
         free = self.B
         t = 0.0
         decode_steps = prefills = 0
+        sc_t, sc_v = _norm_step_schedule(step_schedule)
+        si = 0
+        eff_step = step_cycles
+        switches = 0
 
         while waiting or groups:
             if not groups and waiting:
                 t = max(t, reqs[waiting[0]].arrival)   # executor idles
+                while si < len(sc_t) and sc_t[si] <= t:   # silent re-point
+                    eff_step = step_cycles * sc_v[si]
+                    si += 1
             # admission round: arrived requests into free slots; one real
-            # prefill per admission group (ragged chunks may split)
+            # prefill per admission group (ragged chunks may split).
+            # Past-deadline requests shed here — before the prefill.
             admit: List[int] = []
             while waiting and free > 0 and reqs[waiting[0]].arrival <= t:
-                admit.append(waiting.popleft())
+                i = waiting.popleft()
+                if t > dl[i]:
+                    admissions[i] = t
+                    completions[i] = np.inf
+                    done[i] = True
+                    shed_mask[i] = True
+                    continue
+                admit.append(i)
                 free -= 1
             if admit:
                 chunk = [np.asarray(reqs[i].prompt) for i in admit]
@@ -287,6 +351,11 @@ class ServeSession:
                 grouped = [(admit, (lg, ch))] if splits is None else \
                     [([admit[j] for j in idx], lc) for idx, lc in splits]
                 for idx, (logits, cache) in grouped:
+                    while si < len(sc_t) and sc_t[si] <= t:  # rung switch
+                        eff_step = step_cycles * sc_v[si]
+                        si += 1
+                        t += switch_cycles
+                        switches += 1
                     t += prefill_cycles
                     prefills += 1
                     cur = self._sample(logits)
@@ -306,6 +375,11 @@ class ServeSession:
             # boundary (quantum - 1 steps right after a prefill — the
             # prefill logits already produced the first sampled token)
             for g in groups:
+                while si < len(sc_t) and sc_t[si] <= t:      # rung switch
+                    eff_step = step_cycles * sc_v[si]
+                    si += 1
+                    t += switch_cycles
+                    switches += 1
                 cap = int(max(quota[i] for i in g["rows"])) - g["taken"]
                 steps = quantum - (g["taken"] % quantum or quantum)
                 steps = min(steps or quantum, cap)
@@ -320,7 +394,7 @@ class ServeSession:
                 g["cur"], g["cache"] = cur, cache
                 g["taken"] += steps
                 decode_steps += steps
-                t += steps * step_cycles
+                t += steps * eff_step
                 for i in g["rows"]:
                     if not done[i] and 0 < quota[i] <= g["taken"]:
                         completions[i] = t     # leaves at this boundary
@@ -332,12 +406,19 @@ class ServeSession:
         for i, r in enumerate(reqs):
             outputs[i] = outputs[i][:r.max_new]
             r.out[:] = outputs[i]
+        # every request is accounted exactly once: served (finite
+        # completion) or shed (inf) — admissions == completions + shed
+        assert done.all() \
+            and np.isfinite(completions[~shed_mask]).all() \
+            and np.isinf(completions[shed_mask]).all(), \
+            "open-loop accounting broken: admissions != completions + shed"
         return ServeReport(arrivals=arrivals, admissions=admissions,
                            completions=completions,
                            latency=completions - arrivals,
                            queue_wait=admissions - arrivals,
                            outputs=outputs, decode_steps=decode_steps,
-                           prefills=prefills)
+                           prefills=prefills, shed_mask=shed_mask,
+                           switch_stalls=switches)
 
     def _sample(self, logits) -> jnp.ndarray:
         logits = logits[:, -1]

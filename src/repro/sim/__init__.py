@@ -8,6 +8,8 @@ dataflow deployment (``sim.engine``), and SLO-aware partition selection
 """
 from repro.sim.engine import (SIM_TOL, SimReport, saturation_throughput,
                               simulate_partition)
+from repro.sim.faults import (FaultTrace, inject_faults, replica_loss,
+                              zero_fault_trace)
 from repro.sim.slo import (SLO, SimLatencyEvaluator,
                            autoscale_policy_search, latency_percentile,
                            slo_partition_search)
@@ -17,6 +19,7 @@ from repro.sim.trace import (Trace, backlogged_trace, bucket_sizes,
 
 __all__ = [
     "SIM_TOL", "SimReport", "saturation_throughput", "simulate_partition",
+    "FaultTrace", "inject_faults", "replica_loss", "zero_fault_trace",
     "SLO", "SimLatencyEvaluator", "autoscale_policy_search",
     "latency_percentile",
     "slo_partition_search", "Trace", "backlogged_trace", "bucket_sizes",

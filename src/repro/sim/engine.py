@@ -46,6 +46,7 @@ import numpy as np
 from repro.core.dse import PartitionResult, boundary_activations
 from repro.core.perf_model import (ACT_BYTES, HardwareModel, LayerCost,
                                    TPUModel)
+from repro.sim.faults import FaultTrace, NodeFaults
 from repro.sim.trace import Trace, backlogged_trace
 
 # Documented sim-vs-analytic saturation tolerance (relative). Measured
@@ -74,6 +75,11 @@ class SimReport:
     queue_max: np.ndarray         # (M,) peak occupancy
     switch_stalls: int = 0        # partition switches charged (temporal)
     switch_stall_cycles: float = 0.0
+    down: np.ndarray = None       # (M,) fault-displaced cycles (0 if no faults)
+
+    def __post_init__(self):
+        if self.down is None:
+            self.down = np.zeros_like(self.busy)
 
     @property
     def completed(self) -> int:
@@ -103,6 +109,9 @@ class SimReport:
 
     def latency_percentile(self, quantile: float) -> float:
         """Per-request latency percentile, ``quantile`` in 0..100."""
+        if len(self.latency) == 0:
+            raise ValueError(
+                "latency_percentile on a report with zero completions")
         return float(np.percentile(self.latency, quantile))
 
     @property
@@ -135,11 +144,22 @@ class SimReport:
 
 def _simulate_chain(arrivals: np.ndarray, sizes: np.ndarray,
                     service: Sequence[Callable[[int], float]],
-                    caps: Sequence[int], engine: str = "calendar"):
+                    caps: Sequence[int], engine: str = "calendar",
+                    fx: Optional[Callable] = None):
     """Simulate a chain of M serial servers, FIFO queues of capacity
     ``caps[m]`` in front of each (``caps[0]`` is the unbounded admission
     queue), blocking-after-service handoff. Returns
-    (completions, busy, blocked, idle, queue_mean, queue_max).
+    (completions, busy, blocked, idle, queue_mean, queue_max, down).
+
+    ``fx`` is the optional fault hook (``faults.NodeFaults``): called as
+    ``fx(node, t, base_dt) -> (occupation, down_part)`` at every service
+    start, it injects crash/preemption windows (the displaced cycles land
+    in ``down``) and straggler rate multipliers. Base service time stays
+    a pure function of size, so the calendar engine's per-size memo keeps
+    caching it; both engines call ``fx`` with identical triples, so
+    faulted runs carry the same bit-identity contract as fault-free ones.
+    ``fx=None`` leaves every pre-fault code path untouched (bit-identity
+    with pre-fault builds is regression-gated in ``chaos_bench``).
 
     Two engines compute the identical schedule:
 
@@ -149,7 +169,9 @@ def _simulate_chain(arrivals: np.ndarray, sizes: np.ndarray,
         entries the loop consumes it lazily through a cursor and keeps
         only the <= M in-flight finish events in a tiny sorted list.
         Single-server chains (temporal mode — the fleet policy search's
-        hot path) drop to a vectorized busy-period scan.
+        hot path) drop to a vectorized busy-period scan; with faults the
+        schedule is time-dependent, so M == 1 runs the general calendar
+        loop instead.
 
     Bit-identity between the two is a hard contract (fuzz-gated in
     ``tests/test_sim.py`` and ``benchmarks/fleet_bench.py``): every float
@@ -157,17 +179,17 @@ def _simulate_chain(arrivals: np.ndarray, sizes: np.ndarray,
     the same order as the heap engine's, and simultaneous events resolve
     in the same deterministic insertion order."""
     if engine == "heap":
-        return _simulate_chain_heap(arrivals, sizes, service, caps)
+        return _simulate_chain_heap(arrivals, sizes, service, caps, fx)
     if engine != "calendar":
         raise ValueError(f"unknown engine {engine!r}")
-    if len(service) == 1:
+    if len(service) == 1 and fx is None:
         return _simulate_single_server(arrivals, sizes, service)
-    return _simulate_chain_calendar(arrivals, sizes, service, caps)
+    return _simulate_chain_calendar(arrivals, sizes, service, caps, fx)
 
 
 def _simulate_chain_heap(arrivals: np.ndarray, sizes: np.ndarray,
                          service: Sequence[Callable[[int], float]],
-                         caps: Sequence[int]):
+                         caps: Sequence[int], fx: Optional[Callable] = None):
     """Reference event loop: one binary heap holding every pending event."""
     N, M = len(arrivals), len(service)
     queue = [deque() for _ in range(M)]
@@ -175,6 +197,7 @@ def _simulate_chain_heap(arrivals: np.ndarray, sizes: np.ndarray,
     held: List[Optional[int]] = [None] * M    # finished, blocked downstream
     block_t = [0.0] * M
     busy = [0.0] * M
+    down = [0.0] * M
     blocked = [0.0] * M
     idle = [0.0] * M
     idle_t = [0.0] * M         # when the node last went idle
@@ -217,7 +240,12 @@ def _simulate_chain_heap(arrivals: np.ndarray, sizes: np.ndarray,
         i = queue[m].popleft()
         serving[m] = i
         dt = service[m](int(sizes[i]))
-        busy[m] += dt
+        if fx is not None:
+            dt, dn = fx(m, t, dt)
+            busy[m] += dt - dn
+            down[m] += dn
+        else:
+            busy[m] += dt
         heapq.heappush(events, (t + dt, seq, m, i))
         seq += 1
         if m > 0:
@@ -262,7 +290,7 @@ def _simulate_chain_heap(arrivals: np.ndarray, sizes: np.ndarray,
             idle[m] += horizon - idle_t[m]
             idle_t[m] = horizon
     q_mean = [q_int[m] / horizon if horizon > 0 else 0.0 for m in range(M)]
-    return completions, busy, blocked, idle, q_mean, q_max
+    return completions, busy, blocked, idle, q_mean, q_max, down
 
 
 def _simulate_single_server(arrivals: np.ndarray, sizes: np.ndarray,
@@ -275,7 +303,8 @@ def _simulate_single_server(arrivals: np.ndarray, sizes: np.ndarray,
     performs (bit-exact; ``np.sum``'s pairwise tree would not be)."""
     N = len(arrivals)
     if N == 0:
-        return np.zeros(0, dtype=np.float64), [0.0], [0.0], [0.0], [0.0], [0]
+        return (np.zeros(0, dtype=np.float64),
+                [0.0], [0.0], [0.0], [0.0], [0], [0.0])
     A = np.asarray(arrivals, dtype=np.float64)
     uniq, inv = np.unique(np.asarray(sizes, dtype=np.int64),
                           return_inverse=True)
@@ -333,12 +362,13 @@ def _simulate_single_server(arrivals: np.ndarray, sizes: np.ndarray,
     dt = np.concatenate([[0.0], np.diff(times)])
     q_int = float(np.add.accumulate(occ_before * dt)[-1])
     q_mean = q_int / horizon if horizon > 0 else 0.0
-    return F, [busy], [0.0], [idle], [q_mean], [int(occ.max())]
+    return F, [busy], [0.0], [idle], [q_mean], [int(occ.max())], [0.0]
 
 
 def _simulate_chain_calendar(arrivals: np.ndarray, sizes: np.ndarray,
                              service: Sequence[Callable[[int], float]],
-                             caps: Sequence[int]):
+                             caps: Sequence[int],
+                             fx: Optional[Callable] = None):
     """General-M calendar engine. The heap held N pre-seeded arrivals plus
     <= M finish events; here the sorted arrival array is consumed through
     a cursor and only the finish events live in a bisect-insort'd list.
@@ -360,6 +390,7 @@ def _simulate_chain_calendar(arrivals: np.ndarray, sizes: np.ndarray,
     held = [-1] * M            # request index, -1 = not held
     block_t = [0.0] * M
     busy = [0.0] * M
+    down = [0.0] * M
     blocked = [0.0] * M
     idle = [0.0] * M
     idle_t = [0.0] * M
@@ -394,7 +425,12 @@ def _simulate_chain_calendar(arrivals: np.ndarray, sizes: np.ndarray,
                     dt = memo.get(sz)
                     if dt is None:
                         dt = memo[sz] = service[m](sz)
-                    busy[m] += dt
+                    if fx is not None:
+                        dt, dn = fx(m, t, dt)
+                        busy[m] += dt - dn
+                        down[m] += dn
+                    else:
+                        busy[m] += dt
                     insort(pend, (t + dt, seq, m, j))
                     seq += 1
                     w = m
@@ -422,7 +458,12 @@ def _simulate_chain_calendar(arrivals: np.ndarray, sizes: np.ndarray,
                             dt = memo.get(sz)
                             if dt is None:
                                 dt = memo[sz] = service[k](sz)
-                            busy[k] += dt
+                            if fx is not None:
+                                dt, dn = fx(k, t, dt)
+                                busy[k] += dt - dn
+                                down[k] += dn
+                            else:
+                                busy[k] += dt
                             insort(pend, (t + dt, seq, k, j))
                             seq += 1
                             w = k
@@ -456,7 +497,12 @@ def _simulate_chain_calendar(arrivals: np.ndarray, sizes: np.ndarray,
                     dt = memo.get(sz)
                     if dt is None:
                         dt = memo[sz] = service[n](sz)
-                    busy[n] += dt
+                    if fx is not None:
+                        dt, dn = fx(n, t, dt)
+                        busy[n] += dt - dn
+                        down[n] += dn
+                    else:
+                        busy[n] += dt
                     insort(pend, (t + dt, seq, n, j))
                     seq += 1
                     # unblock(m): held[m] < 0 on a finish event -> no-op
@@ -471,7 +517,12 @@ def _simulate_chain_calendar(arrivals: np.ndarray, sizes: np.ndarray,
                     dt = memo.get(sz)
                     if dt is None:
                         dt = memo[sz] = service[m](sz)
-                    busy[m] += dt
+                    if fx is not None:
+                        dt, dn = fx(m, t, dt)
+                        busy[m] += dt - dn
+                        down[m] += dn
+                    else:
+                        busy[m] += dt
                     insort(pend, (t + dt, seq, m, j))
                     seq += 1
                     w = m
@@ -499,7 +550,12 @@ def _simulate_chain_calendar(arrivals: np.ndarray, sizes: np.ndarray,
                             dt = memo.get(sz)
                             if dt is None:
                                 dt = memo[sz] = service[k](sz)
-                            busy[k] += dt
+                            if fx is not None:
+                                dt, dn = fx(k, t, dt)
+                                busy[k] += dt - dn
+                                down[k] += dn
+                            else:
+                                busy[k] += dt
                             insort(pend, (t + dt, seq, k, j))
                             seq += 1
                             w = k
@@ -537,7 +593,12 @@ def _simulate_chain_calendar(arrivals: np.ndarray, sizes: np.ndarray,
                 dt = memo.get(sz)
                 if dt is None:
                     dt = memo[sz] = service[0](sz)
-                busy[0] += dt
+                if fx is not None:
+                    dt, dn = fx(0, t, dt)
+                    busy[0] += dt - dn
+                    down[0] += dn
+                else:
+                    busy[0] += dt
                 insort(pend, (t + dt, seq, 0, j))
                 seq += 1
         else:
@@ -555,14 +616,14 @@ def _simulate_chain_calendar(arrivals: np.ndarray, sizes: np.ndarray,
             idle[m] += horizon - idle_t[m]
             idle_t[m] = horizon
     q_mean = [q_int[m] / horizon if horizon > 0 else 0.0 for m in range(M)]
-    return completions, busy, blocked, idle, q_mean, q_max
+    return completions, busy, blocked, idle, q_mean, q_max, down
 
 
 def simulate_partition(layers: Sequence[LayerCost], hw: HardwareModel,
                        partition: PartitionResult, trace: Trace, *,
                        q_depth: int = 8, reconfig_cycles: float = 5e7,
-                       mode: str = "auto",
-                       engine: str = "calendar") -> SimReport:
+                       mode: str = "auto", engine: str = "calendar",
+                       faults: Optional[FaultTrace] = None) -> SimReport:
     """Simulate ``trace`` through the deployment ``partition`` describes
     (stage rates from its per-stage DSE designs, ICI hops priced at the
     cuts' boundary activations). ``mode="auto"`` picks spatial for a
@@ -570,7 +631,13 @@ def simulate_partition(layers: Sequence[LayerCost], hw: HardwareModel,
     and temporal otherwise; ``reconfig_cycles`` is the temporal switch
     stall, matching ``partition_pipeline``'s accounting. ``engine``
     selects the event engine (``"calendar"`` default, ``"heap"``
-    reference — bit-identical by contract, see ``_simulate_chain``)."""
+    reference — bit-identical by contract, see ``_simulate_chain``).
+
+    ``faults`` injects a deterministic ``FaultTrace`` (DESIGN.md §17):
+    stage crash/preemption windows park the server (displaced cycles in
+    ``SimReport.down``), straggler windows divide its rate, ``ici`` rows
+    degrade the hop servers (spatial mode). ``None`` — or an *empty*
+    trace — leaves every pre-fault code path untouched."""
     rates = [float(r) for r in partition.part_throughput]
     cuts = list(partition.cuts)
     if not rates or min(rates) <= 0:
@@ -621,8 +688,11 @@ def simulate_partition(layers: Sequence[LayerCost], hw: HardwareModel,
             switch_stalls = len(cuts) * N
             stall_cycles = float(sum(switch_of(int(s)) for s in sizes))
 
-    completions, busy, blocked, idle, q_mean, q_max = _simulate_chain(
-        arrivals, sizes, service, caps, engine=engine)
+    fx = None
+    if faults is not None and not faults.empty:
+        fx = NodeFaults.for_chain(faults, len(rates), mode)
+    completions, busy, blocked, idle, q_mean, q_max, down = _simulate_chain(
+        arrivals, sizes, service, caps, engine=engine, fx=fx)
     return SimReport(mode=mode, node_names=names, arrivals=arrivals,
                      sizes=sizes, completions=completions,
                      latency=completions - arrivals,
@@ -631,7 +701,8 @@ def simulate_partition(layers: Sequence[LayerCost], hw: HardwareModel,
                      queue_mean=np.asarray(q_mean),
                      queue_max=np.asarray(q_max, dtype=np.int64),
                      switch_stalls=switch_stalls,
-                     switch_stall_cycles=stall_cycles)
+                     switch_stall_cycles=stall_cycles,
+                     down=np.asarray(down, dtype=np.float64))
 
 
 def saturation_throughput(layers: Sequence[LayerCost], hw: HardwareModel,

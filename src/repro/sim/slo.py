@@ -32,7 +32,18 @@ import numpy as np
 from repro.core.dse import DSECache, PartitionResult, partition_pipeline
 from repro.core.perf_model import HardwareModel, LayerCost, TPUModel
 from repro.sim.engine import SimReport, simulate_partition
+from repro.sim.faults import FaultTrace
 from repro.sim.trace import Trace
+
+
+def _fault_set(faults) -> List[FaultTrace]:
+    """Normalize a ``faults=`` argument — None, one ``FaultTrace``, or a
+    sequence of them — to a list of non-empty scenarios."""
+    if faults is None:
+        return []
+    if isinstance(faults, FaultTrace):
+        faults = [faults]
+    return [f for f in faults if not f.empty]
 
 
 @dataclass(frozen=True)
@@ -64,13 +75,22 @@ def slo_partition_search(layers: Sequence[LayerCost], hw: HardwareModel,
                          cache: Optional[DSECache] = None,
                          chip_budgets: Optional[Sequence[float]] = None,
                          q_depth: int = 8,
-                         mode: str = "auto") -> PartitionResult:
+                         mode: str = "auto",
+                         faults=None) -> PartitionResult:
     """``partition_pipeline(objective="slo")``: pick the partitioning whose
     *simulated* deployment meets the latency SLO (see module docstring for
     the candidate set and selection rule). ``slo`` is an ``SLO`` or a bare
     p99 target in cycles; ``trace`` is the offered load. The returned
     ``PartitionResult`` has ``objective="slo"`` and carries the winning
-    candidate's ``sim_report``."""
+    candidate's ``sim_report``.
+
+    ``faults`` (a ``FaultTrace`` or a sequence of them) makes the search
+    *failure-aware*: every candidate is additionally simulated under each
+    fault scenario and its feasibility latency becomes the WORST p99 over
+    {nominal} ∪ scenarios — the winner is the max-capacity candidate whose
+    tail survives the whole fault set, not just clear weather. The winner's
+    per-scenario reports come back in ``fault_reports`` (nominal stays in
+    ``sim_report``)."""
     if trace is None:
         raise ValueError("objective='slo' needs trace= (the offered load)")
     if slo is None:
@@ -96,7 +116,14 @@ def slo_partition_search(layers: Sequence[LayerCost], hw: HardwareModel,
     sims = [simulate_partition(layers, hw, c, trace, q_depth=q_depth,
                                reconfig_cycles=reconfig_cycles, mode=mode)
             for c in cands]
-    lats = [latency_percentile(r, slo.quantile) for r in sims]
+    scenarios = _fault_set(faults)
+    fsims = [[simulate_partition(layers, hw, c, trace, q_depth=q_depth,
+                                 reconfig_cycles=reconfig_cycles, mode=mode,
+                                 faults=f) for f in scenarios]
+             for c in cands]
+    lats = [max([latency_percentile(r, slo.quantile)]
+                + [latency_percentile(fr, slo.quantile) for fr in frs])
+            for r, frs in zip(sims, fsims)]
 
     def capacity(c: PartitionResult) -> float:
         # the schedule's analytic saturation rate: spatial steady rate on a
@@ -117,13 +144,17 @@ def slo_partition_search(layers: Sequence[LayerCost], hw: HardwareModel,
         win = min(range(len(cands)), key=lambda k: (lats[k], k))
     out = replace(cands[win], objective="slo")
     out.sim_report = sims[win]
+    if scenarios:
+        out.fault_reports = fsims[win]
     return out
 
 
 def autoscale_policy_search(trace: Trace, *, batch_slots: int,
                             step_cycles: float, prefill_cycles: float = 0.0,
                             buckets=None, max_replicas: int = 4,
-                            slo=None, n_trials: int = 48, seed: int = 0):
+                            slo=None, n_trials: int = 48, seed: int = 0,
+                            faults=None, retry=None, degradation=None,
+                            deadline_cycles=None):
     """TPE over fleet autoscaling-policy knobs (DESIGN.md §14).
 
     The search space is ``repro.serve.fleet.AutoscalePolicy``'s knobs —
@@ -146,7 +177,16 @@ def autoscale_policy_search(trace: Trace, *, batch_slots: int,
     The returned policy is the *feasible* trial (p99 no worse than the
     best static, and within the SLO when given) with the lowest cost;
     when no trial is feasible, the lowest-p99 trial — degraded, not
-    undefined, mirroring ``slo_partition_search``."""
+    undefined, mirroring ``slo_partition_search``.
+
+    ``faults``/``retry``/``degradation``/``deadline_cycles`` pass through
+    to every ``simulate_fleet`` call — static baselines and TPE trials
+    alike, so the comparison stays apples-to-apples under the same fault
+    scenario. With a deadline the scoring turns shed-aware: trials pay
+    ``1000 * excess_shed_fraction`` versus the static best and feasibility
+    additionally requires shedding no more than it, so the winner is the
+    cheapest policy whose tail AND completion rate both survive the fault
+    set (failure-aware SLO search, DESIGN.md §17)."""
     from repro.core.tpe import TPE
     from repro.serve.fleet import AutoscalePolicy, simulate_fleet
     from repro.serve.serve_loop import DEFAULT_BUCKETS
@@ -155,15 +195,27 @@ def autoscale_policy_search(trace: Trace, *, batch_slots: int,
     if slo is not None and not isinstance(slo, SLO):
         slo = SLO(target=float(slo))
     kw = dict(batch_slots=batch_slots, step_cycles=step_cycles,
-              prefill_cycles=prefill_cycles, buckets=buckets)
+              prefill_cycles=prefill_cycles, buckets=buckets,
+              faults=faults, retry=retry, degradation=degradation,
+              deadline_cycles=deadline_cycles)
     max_replicas = max(int(max_replicas), 1)
+    n_req = len(trace.arrivals)
+
+    def p99_of(rep) -> float:
+        # a chaos trial that sheds every request has no latency sample;
+        # treat it as infinitely slow rather than erroring the search
+        return rep.p99 if rep.completed else float("inf")
+
     baselines = {}
+    sheds = {}
     for r in range(1, max_replicas + 1):
         rep = simulate_fleet(trace, AutoscalePolicy.static(r), **kw)
-        baselines[r] = (rep.p99, rep.replica_cycles)
-    static_best = min(baselines, key=lambda r: (baselines[r][0],
+        baselines[r] = (p99_of(rep), rep.replica_cycles)
+        sheds[r] = rep.shed
+    static_best = min(baselines, key=lambda r: (sheds[r], baselines[r][0],
                                                 baselines[r][1], r))
     p99_s, cost_s = baselines[static_best]
+    shed_s = sheds[static_best]
     baselines["static_best"] = static_best
 
     quantum_cycles = max(float(np.sort(np.asarray(list(buckets)))[0])
@@ -190,18 +242,22 @@ def autoscale_policy_search(trace: Trace, *, batch_slots: int,
         x = opt.ask()
         pol = decode(x)
         rep = simulate_fleet(trace, pol, **kw)
-        hinge = max(0.0, rep.p99 / p99_s - 1.0)
+        p99_t = p99_of(rep)
+        hinge = max(0.0, p99_t / p99_s - 1.0)
         if slo is not None:
-            hinge += max(0.0, rep.p99 / slo.target - 1.0)
-        opt.tell(x, -(rep.replica_cycles / cost_s) - 100.0 * hinge)
+            hinge += max(0.0, p99_t / slo.target - 1.0)
+        shed_pen = 10.0 * max(0, rep.shed - shed_s) / max(n_req, 1)
+        opt.tell(x, -(rep.replica_cycles / cost_s) - 100.0 * hinge
+                 - 100.0 * shed_pen)
         trials.append((pol, rep))
     feasible = [k for k, (_, rep) in enumerate(trials)
-                if rep.p99 <= p99_s
-                and (slo is None or rep.p99 <= slo.target)]
+                if p99_of(rep) <= p99_s and rep.shed <= shed_s
+                and (slo is None or p99_of(rep) <= slo.target)]
     if feasible:
         win = min(feasible, key=lambda k: (trials[k][1].replica_cycles, k))
     else:
-        win = min(range(len(trials)), key=lambda k: (trials[k][1].p99, k))
+        win = min(range(len(trials)),
+                  key=lambda k: (p99_of(trials[k][1]), k))
     policy, report = trials[win]
     return policy, report, baselines
 

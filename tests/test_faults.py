@@ -1,0 +1,387 @@
+"""Fault injection, chaos fleet serving, and failure-aware search
+(DESIGN.md §17).
+
+Load-bearing contracts:
+  * a ``FaultTrace`` is deterministic in its arrays (and ``inject_faults``
+    in its seed): equal scenarios ⇒ byte-identical simulations;
+  * the heap and calendar engines stay **bit-identical** under faults and
+    their extended conservation law holds —
+    ``busy + blocked + idle + down == horizon`` per node;
+  * zero-fault scenarios (``faults=None`` vs ``FaultTrace.none()``) take
+    the exact pre-fault code paths: reports match byte for byte;
+  * the chaos fleet loses no request: every admitted request completes or
+    is an accounted shed (``completions == inf`` exactly on
+    ``shed_mask``), and crash/retry runs replay deterministically;
+  * graceful degradation sheds strictly fewer requests than a
+    non-degrading fleet at equal replica cost, and ``degradation_ladder``
+    prices a ``DegradationPolicy``-valid ladder off the DSE frontier;
+  * the failure-aware SLO search simulates every candidate under the
+    fault set and reports per-scenario tails in ``fault_reports``.
+"""
+import numpy as np
+import pytest
+from conftest import sparse_cnn_workload
+
+from repro.configs.paper_cnns import RESNET18
+from repro.core.dse import degradation_ladder, partition_pipeline
+from repro.core.perf_model import FPGAModel, LayerCost, TPUModel
+from repro.serve.fleet import (AutoscalePolicy, DegradationPolicy,
+                               RetryPolicy, open_loop_schedule,
+                               simulate_fleet)
+from repro.sim import (SLO, FaultTrace, autoscale_policy_search,
+                       inject_faults, mmpp_trace, replica_loss,
+                       request_rate, simulate_partition, zero_fault_trace)
+from repro.sim.engine import _simulate_chain
+from repro.sim.faults import NodeFaults
+from repro.sim.slo import latency_percentile, slo_partition_search
+from repro.sim.trace import Trace
+
+KW = dict(batch_slots=4, step_cycles=10.0, prefill_cycles=30.0)
+
+
+# --------------------------------------------------------------------- #
+# FaultTrace construction, validation, determinism
+# --------------------------------------------------------------------- #
+def test_fault_trace_validation_and_canonical_order():
+    with pytest.raises(ValueError, match="columns"):
+        FaultTrace(crashes=[[0.0, 1.0]])
+    with pytest.raises(ValueError, match="t_end > t_start"):
+        FaultTrace(crashes=[[0.0, 5.0, 5.0]])
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultTrace(slowdowns=[[-1.0, 0.0, 1.0, 0.5]])
+    with pytest.raises(ValueError, match="positive"):
+        FaultTrace(ici=[[0.0, 0.0, 1.0, 0.0]])
+    ft = FaultTrace(crashes=[[1, 50.0, 60.0], [0, 10.0, 20.0],
+                             [0, 5.0, 8.0]])
+    # canonical (unit, t_start) order regardless of input order
+    assert ft.crashes[:, 0].tolist() == [0, 0, 1]
+    assert ft.crashes[:, 1].tolist() == [5.0, 10.0, 50.0]
+    assert not ft.empty
+    assert zero_fault_trace().empty and FaultTrace.none().empty
+    rl = replica_loss(2, 100.0)
+    assert rl.down_windows(2) == [(100.0, 1e30)]
+    assert rl.down_windows(0) == []
+
+
+def test_inject_faults_seeded_deterministic():
+    kw = dict(crash_rate=2e-6, restart_mean=1e5, slow_rate=3e-6,
+              slow_mean=5e4, slow_factor=0.4, n_hops=2, ici_rate=1e-6,
+              ici_mean=1e5)
+    a = inject_faults(3, 2e6, seed=7, **kw)
+    b = inject_faults(3, 2e6, seed=7, **kw)
+    c = inject_faults(3, 2e6, seed=8, **kw)
+    assert np.array_equal(a.crashes, b.crashes)
+    assert np.array_equal(a.slowdowns, b.slowdowns)
+    assert np.array_equal(a.ici, b.ici)
+    assert not (np.array_equal(a.crashes, c.crashes)
+                and np.array_equal(a.slowdowns, c.slowdowns))
+    assert not a.empty and a.kind == "injected"
+    with pytest.raises(ValueError, match="n_units"):
+        inject_faults(0, 1e6)
+    with pytest.raises(ValueError, match="horizon"):
+        inject_faults(1, 0.0)
+
+
+def test_node_faults_delay_and_slowdown():
+    fx = NodeFaults(down=[[(10.0, 25.0), (30.0, 40.0)]],
+                    slow=[[(40.0, 100.0, 0.5), (40.0, 100.0, 0.5)]])
+    # service begun inside a down window starts at its end
+    occ, dn = fx(0, 12.0, 8.0)
+    assert dn == 13.0 and occ == 13.0 + 8.0
+    # a delayed start landing in a later window keeps sliding — and the
+    # compounded slowdown at the effective start divides the rate by 4
+    occ, dn = fx(0, 32.0, 8.0)
+    assert dn == 8.0 and occ == 8.0 + 8.0 / 0.25
+    # clean start, no windows active
+    assert fx(0, 0.0, 8.0) == (8.0, 0.0)
+
+
+# --------------------------------------------------------------------- #
+# Engine bit-identity + conservation under faults
+# --------------------------------------------------------------------- #
+def _rand_chain(rng, n_nodes):
+    n = int(rng.integers(40, 120))
+    arr = np.sort(rng.uniform(0, 5e4, n))
+    sizes = rng.integers(1, 16, n).astype(np.int64)
+    rates = rng.uniform(5e-3, 5e-2, n_nodes)
+    service = [(lambda r: (lambda s: s / r))(r) for r in rates]
+    caps = [10**9] + [int(rng.integers(1, 4)) for _ in range(n_nodes - 1)]
+    return arr, sizes, service, caps
+
+
+def test_engines_bit_identical_and_conserve_under_faults():
+    rng = np.random.default_rng(0)
+    for trial in range(6):
+        m = int(rng.integers(1, 5))
+        arr, sizes, service, caps = _rand_chain(rng, m)
+        ft = inject_faults(m, 6e4, crash_rate=3e-4, restart_mean=2e3,
+                           slow_rate=3e-4, slow_mean=3e3, slow_factor=0.5,
+                           seed=trial)
+        fx = NodeFaults(down=[ft.down_windows(u) for u in range(m)],
+                        slow=[ft.slow_windows(u) for u in range(m)])
+        heap = _simulate_chain(arr, sizes, service, caps, "heap", fx)
+        cal = _simulate_chain(arr, sizes, service, caps, "calendar", fx)
+        comp_h, busy_h, blk_h, idle_h, qm_h, qx_h, down_h = heap
+        comp_c, busy_c, blk_c, idle_c, qm_c, qx_c, down_c = cal
+        assert np.array_equal(comp_h, comp_c)
+        for a, b in zip(heap[1:], cal[1:]):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert any(d > 0 for d in down_h), "fault set never fired"
+        horizon = comp_h.max()
+        for k in range(m):
+            total = busy_h[k] + blk_h[k] + idle_h[k] + down_h[k]
+            assert total == pytest.approx(horizon, rel=1e-12)
+
+
+def test_zero_fault_chain_matches_fx_none_bit_exact():
+    rng = np.random.default_rng(1)
+    for m in (1, 3):
+        arr, sizes, service, caps = _rand_chain(rng, m)
+        nul = NodeFaults(down=[[] for _ in range(m)],
+                         slow=[[] for _ in range(m)])
+        for eng in ("heap", "calendar"):
+            ref = _simulate_chain(arr, sizes, service, caps, eng)
+            got = _simulate_chain(arr, sizes, service, caps, eng, nul)
+            assert np.array_equal(ref[0], got[0])
+            for a, b in zip(ref[1:], got[1:]):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_simulate_partition_faults_perturb_and_account():
+    layers = sparse_cnn_workload(RESNET18, seed=0)
+    tpu = TPUModel(chips=4)
+    p = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=4,
+                           batch=16, dse_iters=80, objective="maxmin")
+    rate = request_rate(p.steady_throughput, 0.4, 16)
+    tr = mmpp_trace(200, 0.6 * rate, 3 * rate, dwell_base=4 / rate,
+                    dwell_burst=1 / rate, sizes=16, seed=0)
+    clean = simulate_partition(layers, tpu, p, tr)
+    horizon = float(clean.completions.max())
+    ft = inject_faults(4, horizon, crash_rate=4.0 / horizon,
+                       restart_mean=horizon / 30, slow_rate=4.0 / horizon,
+                       slow_mean=horizon / 20, slow_factor=0.4,
+                       n_hops=3, ici_rate=2.0 / horizon,
+                       ici_mean=horizon / 20, seed=1)
+    hurt = simulate_partition(layers, tpu, p, tr, faults=ft)
+    assert float(hurt.down.sum()) > 0
+    assert hurt.p99 >= clean.p99
+    # zero-fault scenario: byte-identical to faults=None
+    same = simulate_partition(layers, tpu, p, tr, faults=zero_fault_trace())
+    assert np.array_equal(same.completions, clean.completions)
+    assert np.array_equal(same.busy, clean.busy)
+    assert np.array_equal(same.down, clean.down)
+    # determinism: same FaultTrace, same report
+    again = simulate_partition(layers, tpu, p, tr, faults=ft)
+    assert np.array_equal(again.completions, hurt.completions)
+    assert np.array_equal(again.down, hurt.down)
+
+
+def test_latency_percentile_zero_completions_raises():
+    layers = sparse_cnn_workload(RESNET18, seed=0)
+    tpu = TPUModel(chips=2)
+    p = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=2,
+                           batch=16, dse_iters=60, objective="maxmin")
+    tr = Trace(np.array([0.0]), np.array([16]), kind="replay")
+    rep = simulate_partition(layers, tpu, p, tr)
+    rep.latency = rep.latency[:0]
+    with pytest.raises(ValueError, match="zero completions"):
+        latency_percentile(rep)
+
+
+# --------------------------------------------------------------------- #
+# Chaos fleet: validation, conservation, determinism
+# --------------------------------------------------------------------- #
+def test_fleet_validation_errors():
+    tr = mmpp_trace(50, 1e-4, 5e-3, dwell_base=2e4, dwell_burst=1e4,
+                    sizes=[8], seed=0)
+    empty = Trace(np.array([]), np.array([]), kind="replay")
+    with pytest.raises(ValueError, match="non-empty"):
+        simulate_fleet(empty, AutoscalePolicy.static(1), **KW)
+    with pytest.raises(ValueError, match="batch_slots"):
+        simulate_fleet(tr, AutoscalePolicy.static(1), batch_slots=0,
+                       step_cycles=10.0)
+    with pytest.raises(ValueError, match="deadline_cycles"):
+        simulate_fleet(tr, AutoscalePolicy.static(1), deadline_cycles=0.0,
+                       **KW)
+    with pytest.raises(ValueError, match="batch_slots"):
+        open_loop_schedule([0.0], [8], batch_slots=0, step_cycles=1.0)
+    for bad in (dict(min_replicas=0), dict(max_replicas=0),
+                dict(min_replicas=3, max_replicas=2),
+                dict(scale_up_backlog=0.0),
+                dict(scale_up_backlog=1.0, scale_down_backlog=1.5),
+                dict(scale_down_backlog=-0.1), dict(boundary_cycles=0.0),
+                dict(admit_depth=0.0), dict(spinup_cycles=-1.0)):
+        with pytest.raises(ValueError):
+            AutoscalePolicy(**bad)
+    for bad in (dict(ladder=()), dict(ladder=(0.9,)),
+                dict(ladder=(1.0, 0.5, 0.7)), dict(ladder=(1.0, 0.0)),
+                dict(degrade_backlog=0.0),
+                dict(recover_backlog=9.0, degrade_backlog=8.0),
+                dict(dwell_cycles=-1.0), dict(switch_cycles=-1.0)):
+        with pytest.raises(ValueError):
+            DegradationPolicy(**bad)
+
+
+def test_fleet_zero_fault_scenario_bit_identical():
+    tr = mmpp_trace(300, 1e-4, 8e-3, dwell_base=1e5, dwell_burst=4e4,
+                    sizes=[8, 16], seed=2)
+    pol = AutoscalePolicy(min_replicas=1, max_replicas=3,
+                          scale_up_backlog=1.0, scale_down_backlog=0.2)
+    ref = simulate_fleet(tr, pol, **KW)
+    got = simulate_fleet(tr, pol, faults=zero_fault_trace(), **KW)
+    for f in ("admissions", "completions", "latency", "assignment",
+              "routed_at", "shed_mask", "retries"):
+        assert np.array_equal(getattr(ref, f), getattr(got, f)), f
+    assert got.replica_cycles == ref.replica_cycles
+    assert got.shed == 0 and got.retries.sum() == 0
+
+
+def test_fleet_crash_retry_deterministic_and_conserving():
+    tr = mmpp_trace(600, 2e-4, 1.5e-2, dwell_base=3e5, dwell_burst=8e4,
+                    sizes=[8, 16], seed=0)
+    peak = float(np.median(tr.arrivals))
+    ft = replica_loss(1, peak, peak + 5e5)
+    a = simulate_fleet(tr, AutoscalePolicy.static(2), faults=ft, **KW)
+    b = simulate_fleet(tr, AutoscalePolicy.static(2), faults=ft, **KW)
+    for f in ("admissions", "completions", "latency", "assignment",
+              "routed_at", "shed_mask", "retries"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert a.retries.sum() > 0, "crash at peak never forced a re-dispatch"
+    # conservation: every request completes or is an accounted shed
+    assert np.all(np.isfinite(a.completions[~a.shed_mask]))
+    assert np.all(np.isinf(a.completions[a.shed_mask]))
+    assert a.completed + a.shed == len(tr.arrivals)
+    clean = simulate_fleet(tr, AutoscalePolicy.static(2), **KW)
+    assert a.p99 > clean.p99
+
+
+def test_fleet_retry_budget_sheds_not_loses():
+    """A never-restarting crash of the only replica: all in-flight and
+    later requests must exhaust their retry budget and shed — none lost,
+    none stuck."""
+    arr = np.arange(40) * 1e3
+    tr = Trace(arr, np.full(40, 8), kind="replay")
+    ft = replica_loss(0, 5e3)
+    rep = simulate_fleet(tr, AutoscalePolicy.static(1), faults=ft,
+                         retry=RetryPolicy(max_retries=1,
+                                           backoff_base=1e3), **KW)
+    assert rep.shed > 0
+    assert rep.completed + rep.shed == 40
+    assert np.all(np.isinf(rep.completions[rep.shed_mask]))
+    assert np.all(rep.retries[rep.shed_mask] >= 1)
+
+
+def test_fleet_deadline_sheds_and_filters_percentiles():
+    arr = np.arange(60) * 10.0            # far above one replica's rate
+    tr = Trace(arr, np.full(60, 16), kind="replay")
+    rep = simulate_fleet(tr, AutoscalePolicy.static(1),
+                         deadline_cycles=2e3, **KW)
+    assert rep.shed > 0 and rep.completed > 0
+    # shed requests never count toward the tail
+    lat = rep.latency[~rep.shed_mask]
+    assert rep.p99 <= np.max(lat)
+    assert np.isfinite(rep.p99)
+
+
+def test_degradation_sheds_strictly_fewer_at_equal_cost():
+    tr = mmpp_trace(2000, 2e-4, 2e-2, dwell_base=2e5, dwell_burst=1.5e5,
+                    sizes=[8, 16], seed=0)
+    peak = float(np.median(tr.arrivals))
+    ft = replica_loss(1, peak, peak + 2e6)
+    kw = dict(batch_slots=8, step_cycles=100.0, prefill_cycles=300.0)
+    plain = simulate_fleet(tr, AutoscalePolicy.static(2), faults=ft,
+                           deadline_cycles=2e5, **kw)
+    deg = DegradationPolicy(ladder=(1.0, 0.6, 0.35), degrade_backlog=3.0,
+                            recover_backlog=0.5, dwell_cycles=1e5,
+                            switch_cycles=1e4)
+    soft = simulate_fleet(tr, AutoscalePolicy.static(2), faults=ft,
+                          deadline_cycles=2e5, degradation=deg, **kw)
+    assert soft.shed < plain.shed
+    assert soft.replica_cycles <= plain.replica_cycles * (1 + 1e-9)
+    # the controller actually moved down the ladder and back
+    rungs = [r for _, r in soft.rung_timeline]
+    assert max(rungs) >= 1 and rungs[0] == 0
+    # determinism of the degraded run
+    again = simulate_fleet(tr, AutoscalePolicy.static(2), faults=ft,
+                           deadline_cycles=2e5, degradation=deg, **kw)
+    assert np.array_equal(again.completions, soft.completions)
+    assert again.rung_timeline == soft.rung_timeline
+
+
+# --------------------------------------------------------------------- #
+# Degradation ladder off the DSE frontier
+# --------------------------------------------------------------------- #
+def test_degradation_ladder_prices_valid_policy():
+    hw = FPGAModel()
+    rng = np.random.default_rng(0)
+    layers = [LayerCost(f"l{i}", macs=int(rng.integers(1e5, 1e6)),
+                        m_dot=64, weight_count=1, act_in=1, act_out=1,
+                        s_w=float(rng.uniform(0.2, 0.6)))
+              for i in range(6)]
+    rungs = degradation_ladder(layers, hw, budget=2000.0,
+                               s_extra=(0.0, 0.15, 0.3))
+    assert rungs[0].step_scale == 1.0 and rungs[0].s_extra == 0.0
+    assert all(b.step_scale <= a.step_scale
+               for a, b in zip(rungs, rungs[1:]))
+    assert all(b.throughput >= a.throughput
+               for a, b in zip(rungs, rungs[1:]))
+    # the ladder drops straight into the serving-side policy
+    DegradationPolicy(ladder=tuple(r.step_scale for r in rungs))
+    for bad in ((0.1, 0.2), (0.0, 0.2, 0.2), (0.0, 1.0), ()):
+        with pytest.raises(ValueError):
+            degradation_ladder(layers, hw, 2000.0, s_extra=bad)
+
+
+# --------------------------------------------------------------------- #
+# Failure-aware SLO / autoscale search
+# --------------------------------------------------------------------- #
+def test_slo_partition_search_failure_aware():
+    layers = sparse_cnn_workload(RESNET18, seed=0)
+    tpu = TPUModel(chips=4)
+    mm = partition_pipeline(layers, tpu, tpu.chip_budget, n_parts=4,
+                            batch=16, dse_iters=80, objective="maxmin")
+    rate = request_rate(mm.steady_throughput, 0.4, 16)
+    tr = mmpp_trace(200, 0.6 * rate, 3 * rate, dwell_base=4 / rate,
+                    dwell_burst=1 / rate, sizes=16, seed=0)
+    rep0 = simulate_partition(layers, tpu, mm, tr)
+    slo = SLO(target=rep0.p99 * 4.0)
+    horizon = float(rep0.completions.max())
+    ft = inject_faults(4, horizon, slow_rate=6.0 / horizon,
+                       slow_mean=horizon / 10, slow_factor=0.3, seed=2)
+    r = slo_partition_search(layers, tpu, tpu.chip_budget, slo=slo,
+                             trace=tr, n_parts=4, batch=16, dse_iters=80,
+                             faults=ft)
+    assert r.objective == "slo"
+    assert r.fault_reports is not None and len(r.fault_reports) == 1
+    assert float(r.fault_reports[0].down.sum()) >= 0
+    # an empty fault set leaves the pristine result (and no fault_reports)
+    blind = slo_partition_search(layers, tpu, tpu.chip_budget, slo=slo,
+                                 trace=tr, n_parts=4, batch=16,
+                                 dse_iters=80)
+    zero = slo_partition_search(layers, tpu, tpu.chip_budget, slo=slo,
+                                trace=tr, n_parts=4, batch=16,
+                                dse_iters=80, faults=zero_fault_trace())
+    assert zero.cuts == blind.cuts and zero.fault_reports is None
+    assert np.array_equal(zero.sim_report.completions,
+                          blind.sim_report.completions)
+
+
+def test_autoscale_policy_search_failure_aware_smoke():
+    tr = mmpp_trace(400, 2e-4, 1.2e-2, dwell_base=2e5, dwell_burst=8e4,
+                    sizes=[8, 16], seed=1)
+    peak = float(np.median(tr.arrivals))
+    ft = replica_loss(0, peak, peak + 8e5)
+    pol, rep, base = autoscale_policy_search(
+        tr, batch_slots=4, step_cycles=10.0, prefill_cycles=30.0,
+        max_replicas=3, n_trials=8, seed=0, faults=ft,
+        deadline_cycles=3e5)
+    assert 1 <= pol.min_replicas <= pol.max_replicas == 3
+    p99_s, _ = base[base["static_best"]]
+    assert rep.completed + rep.shed == 400
+    # determinism under the fault scenario
+    pol2, rep2, _ = autoscale_policy_search(
+        tr, batch_slots=4, step_cycles=10.0, prefill_cycles=30.0,
+        max_replicas=3, n_trials=8, seed=0, faults=ft,
+        deadline_cycles=3e5)
+    assert pol2 == pol
+    assert np.array_equal(rep2.completions, rep.completions)

@@ -172,6 +172,56 @@ def test_simulate_fleet_scales_up_and_down():
     assert rep.p99 <= static.p99 * (1 + 1e-9)
 
 
+def test_serve_open_loop_deadline_sheds_and_accounts(sess):
+    """Past-deadline requests shed at their admission round: no slot, no
+    model call, ``completions == inf`` exactly, and the report's
+    percentiles/horizon only see the served rows."""
+    rng = np.random.default_rng(6)
+    arr = np.cumsum(rng.exponential(20.0, 12))
+    reqs = [Request(prompt=rng.integers(0, CFG.vocab_size, size=5),
+                    max_new=8, arrival=float(a),
+                    deadline=float(a) + (50.0 if k % 3 == 0 else 1e9))
+            for k, a in enumerate(arr)]
+    rep = sess.serve_open_loop(reqs, step_cycles=30.0, prefill_cycles=90.0)
+    assert rep.shed > 0 and rep.completed + rep.shed == 12
+    assert np.all(np.isinf(rep.completions[rep.shed_mask]))
+    assert np.all(np.isfinite(rep.completions[~rep.shed_mask]))
+    # shed rows emitted nothing; served rows decoded fully
+    outs = [len(o) for o in rep.outputs]
+    assert all(n == 0 for n, s in zip(outs, rep.shed_mask) if s)
+    assert all(n == 8 for n, s in zip(outs, rep.shed_mask) if not s)
+    assert np.isfinite(rep.p99) and np.isfinite(rep.horizon)
+
+
+def test_degraded_schedule_is_exact_timing_twin(sess):
+    """A frontier-degraded bucket schedule (rung step-scale changes mid
+    trace + per-request deadlines) replays twin-identical through the
+    real serve path — the property that lets the chaos fleet's degraded
+    epochs trust ``open_loop_schedule``."""
+    rng = np.random.default_rng(8)
+    n = 16
+    arr = np.cumsum(rng.exponential(250.0, n)).astype(float)
+    new = rng.integers(4, 20, n).astype(float)
+    dls = arr + rng.uniform(8e2, 8e3, n)
+    sched = [(0.0, 1.0), (float(arr[5]), 0.6), (float(arr[11]), 0.85)]
+    reqs = [Request(prompt=rng.integers(0, CFG.vocab_size, size=5),
+                    max_new=int(new[i]), arrival=float(arr[i]),
+                    deadline=float(dls[i])) for i in range(n)]
+    rep = sess.serve_open_loop(reqs, step_cycles=25.0, prefill_cycles=75.0,
+                               step_schedule=sched, switch_cycles=40.0)
+    adm, comp = open_loop_schedule(arr, new, batch_slots=sess.B,
+                                   step_cycles=25.0, prefill_cycles=75.0,
+                                   deadlines=dls, step_schedule=sched,
+                                   switch_cycles=40.0)
+    assert np.array_equal(rep.admissions, adm)
+    assert np.array_equal(rep.completions, comp)
+    assert rep.switch_stalls == 2
+    assert rep.shed + rep.completed == n
+    with pytest.raises(ValueError, match="scale"):
+        open_loop_schedule(arr, new, batch_slots=2, step_cycles=1.0,
+                           step_schedule=[(0.0, 0.0)])
+
+
 def test_autoscale_policy_search_smoke():
     tr = mmpp_trace(300, 1e-4, 8e-3, dwell_base=1e5, dwell_burst=4e4,
                     sizes=[8, 16], seed=2)

@@ -257,7 +257,7 @@ def test_report_utilization_and_throughput_sanity():
 # Calendar-queue engine: bit-identity with the heap engine + conservation
 # --------------------------------------------------------------------- #
 _CHAIN_FIELDS = ("completions", "busy", "blocked", "idle",
-                 "queue_mean", "queue_max")
+                 "queue_mean", "queue_max", "down")
 
 
 def _fuzz_trace(kind: str, n: int, seed: int):
@@ -312,7 +312,7 @@ def test_property_time_conservation_busy_blocked_idle(seed, kind, m,
     service = [lambda sz, f=float(rng.uniform(5e4, 5e5)): sz * f + 1e3
                for _ in range(m)]
     caps = [len(tr) + 1] + [1] * (m - 1)      # depth-1: maximal blocking
-    completions, busy, blocked, idle, _, _ = _simulate_chain(
+    completions, busy, blocked, idle, _, _, _ = _simulate_chain(
         tr.arrivals, tr.sizes, service, caps, engine=engine)
     horizon = float(np.max(completions))
     total = np.asarray(busy) + np.asarray(blocked) + np.asarray(idle)
