@@ -1,16 +1,39 @@
 """Benchmark harness — one entry per paper table/figure + the roofline report.
 
-``python -m benchmarks.run`` prints ``name,us_per_call,derived`` CSV rows.
-Flags scale the heavier searches (--full reproduces the paper's 96-iteration
-budget; default keeps a single-core run under ~15 minutes).
+``python -m benchmarks.run`` prints ``name,us_per_call,derived`` CSV rows
+and writes ``experiments/bench_summary.json`` — one machine-readable row
+per executed job (name, wall seconds, pass/fail, and the scalar metrics
+pulled off the job's returned payload) so CI and the report tooling can
+consume the run without scraping stdout. ``--list`` prints the registered
+job names and exits. Flags scale the heavier searches (--full reproduces
+the paper's 96-iteration budget; default keeps a single-core run under
+~15 minutes).
 """
 import argparse
 import os
 import sys
+import time
 import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _scalar_metrics(payload, prefix: str = "", depth: int = 2) -> dict:
+    """The payload's top-level scalars (one nesting level of dicts is
+    flattened as ``outer.inner``) — the derived numbers a dashboard would
+    plot, without dragging whole per-row tables into the summary."""
+    out = {}
+    if not isinstance(payload, dict):
+        return out
+    for k, v in payload.items():
+        if isinstance(v, bool) or isinstance(v, (int, float, str)):
+            out[prefix + str(k)] = v
+        elif isinstance(v, dict) and depth > 1:
+            for kk, vv in v.items():
+                if isinstance(vv, (bool, int, float, str)):
+                    out[f"{prefix}{k}.{kk}"] = vv
+    return out
 
 
 def main() -> None:
@@ -18,9 +41,11 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-budget searches (96 TPE iters)")
     ap.add_argument("--only", default=None,
-                    help="comma list: kernels,fig4,fig6,fig5,fig1,table2,"
+                    help="comma list: kernels,fig4,fig6,fig1,fig5,table2,"
                          "roofline,dse,lm_dse,search,sim,fleet,sparsity,"
-                         "chaos")
+                         "chaos,obs")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered job names and exit")
     args = ap.parse_args()
     iters = 96 if args.full else 10
     t2_iters = 24 if args.full else 8
@@ -29,8 +54,10 @@ def main() -> None:
     from benchmarks import (chaos_bench, dse_bench, fig1_frontier,
                             fig4_dse_allocation, fig5_search_compare,
                             fig6_speedup, fleet_bench, kernels_bench,
-                            lm_dse_bench, roofline_report, search_bench,
-                            sim_bench, sparsity_bench, table2_models)
+                            lm_dse_bench, obs_bench, roofline_report,
+                            search_bench, sim_bench, sparsity_bench,
+                            table2_models)
+    from benchmarks.common import save_json
     jobs = [
         ("kernels", lambda: kernels_bench.run()),
         ("fig4", lambda: fig4_dse_allocation.run()),
@@ -47,19 +74,34 @@ def main() -> None:
         ("fleet", lambda: fleet_bench.run(smoke=smoke)),
         ("sparsity", lambda: sparsity_bench.run(smoke=smoke)),
         ("chaos", lambda: chaos_bench.run(smoke=smoke)),
+        ("obs", lambda: obs_bench.run(smoke=smoke)),
     ]
+    if args.list:
+        for name, _ in jobs:
+            print(name)
+        return
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     failures = 0
+    summary = []
     for name, job in jobs:
         if only and name not in only:
             continue
+        t0 = time.perf_counter()
         try:
-            job()
+            payload = job()
+            summary.append({"job": name, "ok": True,
+                            "wall_s": round(time.perf_counter() - t0, 3),
+                            "metrics": _scalar_metrics(payload)})
         except Exception:                                     # noqa: BLE001
             failures += 1
             traceback.print_exc()
             print(f"{name},0,FAILED")
+            summary.append({"job": name, "ok": False,
+                            "wall_s": round(time.perf_counter() - t0, 3),
+                            "metrics": {}})
+    save_json("bench_summary.json",
+              {"full": args.full, "failures": failures, "jobs": summary})
     if failures:
         raise SystemExit(1)
 

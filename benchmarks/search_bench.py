@@ -75,6 +75,12 @@ def _timed_search(ev, n_search, **kw):
     return r, time.perf_counter() - t0
 
 
+def _cache_str(stats) -> str:
+    """The DSECache reuse counters as a printable suffix."""
+    return (f"cache hits={stats['hits']} warm_l1={stats['warm_l1']} "
+            f"warm_l2={stats['warm_l2']} cold={stats['cold_runs']}")
+
+
 def bench_cnn(iters: int, seed: int = 0, img_res: int = 32):
     cfg = dataclasses.replace(RESNET18, img_res=img_res)
     params = trained_cnn(cfg, steps=10)
@@ -100,7 +106,7 @@ def bench_cnn(iters: int, seed: int = 0, img_res: int = 32):
            "cache": ev_a.dse_cache.stats()}
     print(f"  cnn resnet18      {iters:3d} trials  "
           f"seed-path={t_b:7.1f}s  accel={t_a:6.1f}s  {speedup:6.1f}x  "
-          f"(identical trials)")
+          f"(identical trials, {_cache_str(row['cache'])})")
     assert speedup >= SPEED_GATE, \
         f"CNN search speedup regressed: {speedup:.1f}x < {SPEED_GATE}x"
     return row, ev_a, r_a
@@ -144,7 +150,8 @@ def bench_lm(models, iters: int, seed: int = 0, dse_iters: int = 300):
         best[name] = (ev_a, r_a)
         print(f"  lm  {name:14s}{iters:3d} trials  "
               f"seed-path={t_b:7.1f}s  accel={t_a:6.1f}s  {speedup:6.1f}x  "
-              f"(identical trials, {iters / t_a:.0f} trials/s)")
+              f"(identical trials, {iters / t_a:.0f} trials/s, "
+              f"{_cache_str(rows[-1]['cache'])})")
         assert speedup >= SPEED_GATE, \
             f"{name} search speedup regressed: {speedup:.1f}x < {SPEED_GATE}x"
     return rows, best
@@ -193,7 +200,8 @@ def bench_batch(iters: int, gate: float, seed: int = 0, batch_size: int = 8,
            "cache": ev_a.dse_cache.stats()}
     print(f"  batch qwen3-0.6b  {iters:3d} trials/wave={batch_size}  "
           f"per-proposal={t_s * 1e3:6.1f}ms  batched={t_a * 1e3:6.1f}ms  "
-          f"{speedup:5.2f}x  (identical trials, {row['engine']} engine)")
+          f"{speedup:5.2f}x  (identical trials, {row['engine']} engine, "
+          f"{_cache_str(row['cache'])})")
     if compiled:
         assert speedup >= gate, \
             f"batched-DSE speedup regressed: {speedup:.2f}x < {gate}x"

@@ -28,6 +28,24 @@ from repro.core.annealing import simulated_annealing
 from repro.core.perf_model import (ACT_BYTES, DesignPoint, HardwareModel,
                                    LayerCost, LayerVectors, TPUModel,
                                    pipeline_throughput, t_cycles)
+from repro.obs.trace import Counters
+
+# engine-dispatch telemetry (DESIGN.md §18): which backend each DSE
+# invocation actually ran — ``flat``/``grouped`` for the serial greedy,
+# ``compiled``/``lockstep`` for the batched engines. Always-on plain dict
+# increments (one per whole engine run, nothing per iteration); the search
+# flight recorder snapshots deltas per trial.
+ENGINE_DISPATCH = Counters("flat", "grouped", "compiled", "lockstep")
+
+
+def engine_dispatch_stats() -> Dict[str, int]:
+    """Cumulative engine-dispatch counts for this process."""
+    return ENGINE_DISPATCH.as_dict()
+
+
+def reset_engine_dispatch() -> None:
+    for k in ENGINE_DISPATCH.as_dict():
+        ENGINE_DISPATCH.set(k, 0)
 
 
 @dataclass
@@ -730,10 +748,12 @@ def _run_dse(lv: LayerVectors, hw: HardwareModel, budget: float,
         engine = "grouped" if len(lv) >= 16 and 2 * classes[0] <= len(lv) \
             else "flat"
     if engine == "grouped":
+        ENGINE_DISPATCH.inc("grouped")
         return _run_incremental_grouped(lv, hw, budget, max_iters,
                                         classes=classes)
     if engine != "flat":
         raise ValueError(f"unknown engine {engine!r}")
+    ENGINE_DISPATCH.inc("flat")
     return _run_incremental(lv, hw, budget, max_iters)
 
 
@@ -1180,10 +1200,12 @@ def _run_batch_dispatch(lv: LayerVectors, hw: HardwareModel, budget: float,
         if lib is None:
             raise RuntimeError("compiled DSE kernel unavailable "
                                "(no C compiler or REPRO_DSE_CKERNEL=0)")
+        ENGINE_DISPATCH.inc("compiled")
         return _run_incremental_batch_c(lv, hw, budget, s_eff_batch,
                                         max_iters, lib)
     if engine != "lockstep":
         raise ValueError(f"unknown batch engine {engine!r}")
+    ENGINE_DISPATCH.inc("lockstep")
     return _run_incremental_batch(lv, hw, budget,
                                   np.asarray(s_eff_batch, dtype=np.float64),
                                   max_iters)
@@ -1416,10 +1438,11 @@ class DSECache:
         cold run; ``ParetoFrontier.materialize`` still rebuilds any point)."""
         self.max_entries = max_entries
         self.materialize_designs = materialize_designs
-        self.hits = 0
-        self.warm_l1 = 0
-        self.warm_l2 = 0
-        self.cold_runs = 0
+        # decision counters re-backed by the obs Counters bag (DESIGN.md
+        # §18); ``hits``/``warm_l1``/``warm_l2``/``cold_runs`` stay plain
+        # read/write attributes via the properties below, so every
+        # ``self.hits += 1`` site and the ``stats()`` dict are unchanged
+        self._counters = Counters("hits", "warm_l1", "warm_l2", "cold_runs")
         # fingerprint -> {s_eff bytes -> DSEResult}
         self._exact: Dict[int, Dict[bytes, DSEResult]] = {}
         # fingerprint -> [s_eff rows], [rate11 rows], [theta_r], [t-vecs],
@@ -1427,6 +1450,21 @@ class DSECache:
         self._anchors: Dict[int, list] = {}
         # fingerprint -> (flat reachable-N, per-layer segment starts)
         self._nlayout: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+    def _counter(name: str):                       # noqa: N805
+        def _get(self) -> int:
+            return self._counters.get(name)
+
+        def _set(self, v: int) -> None:
+            self._counters.set(name, int(v))
+
+        return property(_get, _set)
+
+    hits = _counter("hits")
+    warm_l1 = _counter("warm_l1")
+    warm_l2 = _counter("warm_l2")
+    cold_runs = _counter("cold_runs")
+    del _counter
 
     @property
     def warm_hits(self) -> int:

@@ -19,7 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pruning
-from repro.core.dse import DSECache, ParetoFrontier, incremental_dse
+from repro.core.dse import (DSECache, ParetoFrontier, engine_dispatch_stats,
+                            incremental_dse)
+from repro.obs.trace import get_tracer
 from repro.core.perf_model import (FPGAModel, HardwareModel, LayerCost,
                                    TPUModel, lm_layer_costs, pair_sparsity,
                                    tile_quantize_sparsity)
@@ -87,7 +89,8 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
                 include_act: bool = True,
                 batch_size: Optional[int] = None,
                 liar: Optional[str] = "min",
-                x0: Optional[np.ndarray] = None) -> SearchResult:
+                x0: Optional[np.ndarray] = None,
+                recorder=None) -> SearchResult:
     """Search per-layer sparsity targets.
 
     evaluate(x) must return a dict with keys:
@@ -130,6 +133,16 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
     a known-good configuration (e.g. the dense network, ``np.zeros(dim)``)
     is always in the trial set and the guided phase explores around it.
     ``None`` (default) changes nothing — proposal streams stay bit-identical.
+
+    ``recorder`` (an ``repro.obs.FlightRecorder``) emits one structured
+    JSONL record per trial — proposal, score, metric terms, DSECache and
+    engine-dispatch counter deltas, per-phase timings — plus run
+    header/footer (DESIGN.md §18). Spans land in the process-global tracer
+    when one is installed (``repro.obs.use_tracer``). With neither, the
+    loop below is the literal uninstrumented seed path; with either,
+    instrumentation only reads clocks and counters, so the trial
+    transcript stays bit-identical in every state (gated in
+    ``benchmarks/obs_bench.py``).
     """
     lambdas = Lambdas() if lambdas is None else lambdas
     dim = n_layers * (2 if include_act else 1)
@@ -177,6 +190,59 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
     old_lam = evaluate.lambdas if sync_lam else None
     if sync_lam:
         evaluate.lambdas = replace(lambdas)
+
+    # observability (DESIGN.md §18). ``obs`` off keeps the literal seed
+    # loops below; on, the instrumented twins time each phase and snapshot
+    # counter deltas — reads only, never a float the search computes.
+    tr = get_tracer()
+    obs = tr.enabled or recorder is not None
+    clk = tr.now if tr.enabled else time.perf_counter
+    cache = getattr(evaluate, "dse_cache", None)
+
+    def _snap():
+        return (dict(cache.stats()) if cache is not None else {},
+                engine_dispatch_stats())
+
+    def _observe(k, t0, t1, t2, t3, snap, first=True, round_size=1):
+        """Record trial ``result.trials[k]``. Batched rounds pass the whole
+        round's window to every member but attribute the shared phase time
+        and counter deltas to the FIRST trial only (zeros elsewhere), so
+        footer totals stay the sum of per-trial records."""
+        if tr.enabled:
+            tr.add_span("trial", t0, t3, depth=0, i=k)
+            if first:
+                tr.add_span("propose", t0, t1, depth=1)
+                tr.add_span("evaluate", t1, t2, depth=1)
+                tr.add_span("tell", t2, t3, depth=1)
+        if recorder is not None:
+            c1, e1 = _snap()
+            zero = {"propose": 0.0, "evaluate": 0.0, "tell": 0.0}
+            t = result.trials[k]
+            recorder.trial(
+                index=k, x=t.x, score=t.score, metrics=t.metrics,
+                cache={key: c1[key] - snap[0].get(key, 0) for key in c1}
+                if first else {},
+                engine={key: e1[key] - snap[1].get(key, 0) for key in e1}
+                if first else {},
+                phases={"propose": t1 - t0, "evaluate": t2 - t1,
+                        "tell": t3 - t2} if first else zero,
+                round_size=round_size)
+
+    def _finish_obs():
+        if tr.enabled:
+            tr.count("search.trials", len(result.trials))
+            if cache is not None:
+                for key, v in cache.stats().items():
+                    tr.gauge(f"search.dse_cache.{key}", v)
+        if recorder is not None:
+            recorder.footer(best_score=result.best_score)
+
+    if obs and recorder is not None:
+        recorder.header(
+            "hass_search", n_layers=n_layers, iters=iters, dim=dim,
+            seed=seed, hardware_aware=hardware_aware, s_max=s_max,
+            include_act=include_act, batch_size=batch_size, liar=liar,
+            evaluator=type(evaluate).__name__)
     try:
         n0 = 0
         if x0 is not None:
@@ -184,14 +250,33 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
             if len(xa) != dim:
                 raise ValueError(
                     f"x0 has {len(xa)} dims, search space has {dim}")
+            if obs:
+                snap = _snap()
+                t0 = clk()
             m = dict(evaluate(xa))
             opt.tell(xa, record(xa, m))
+            if obs:
+                t3 = clk()
+                _observe(0, t0, t0, t3, t3, snap)
             n0 = 1
         if batch_size is None:
+            if not obs:
+                for it in range(max(iters - n0, 0)):
+                    x = opt.ask()
+                    m = dict(evaluate(x))
+                    opt.tell(x, record(x, m))
+                return result
             for it in range(max(iters - n0, 0)):
+                snap = _snap()
+                t0 = clk()
                 x = opt.ask()
+                t1 = clk()
                 m = dict(evaluate(x))
+                t2 = clk()
                 opt.tell(x, record(x, m))
+                t3 = clk()
+                _observe(len(result.trials) - 1, t0, t1, t2, t3, snap)
+            _finish_obs()
             return result
 
         if batch_size < 1:
@@ -200,12 +285,27 @@ def hass_search(evaluate: Callable[[np.ndarray], Dict[str, float]],
         done = n0
         while done < iters:
             k = min(batch_size, iters - done)
+            if obs:
+                snap = _snap()
+                t0 = clk()
             xs = opt.ask_batch(k, liar=liar)
+            if obs:
+                t1 = clk()
             ms = [dict(m) for m in eval_batch(xs)] \
                 if eval_batch is not None and k > 1 \
                 else [dict(evaluate(x)) for x in xs]
+            if obs:
+                t2 = clk()
             opt.tell_batch(xs, [record(x, m) for x, m in zip(xs, ms)])
+            if obs:
+                t3 = clk()
+                base = len(result.trials) - k
+                for j in range(k):
+                    _observe(base + j, t0, t1, t2, t3, snap,
+                             first=(j == 0), round_size=k)
             done += k
+        if obs:
+            _finish_obs()
         return result
     finally:
         if sync_lam:

@@ -34,12 +34,17 @@ from repro.distributed import ctx as shard_ctx
 from repro.distributed.sharding import (batch_spec, cache_spec, param_specs)
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model, input_specs
+from repro.obs.log import get_logger
 from repro.train.optimizer import OptConfig
 from repro.train.train_loop import (TrainConfig, make_train_step,
                                     train_state_shape)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun.json")
+
+# level-filtered and capturable in tests (repro.obs.log.capture); emits
+# the same "[dryrun] ..." lines the bare prints used to
+_log = get_logger("dryrun")
 
 
 def _tree_bytes(tree) -> float:
@@ -248,7 +253,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         if out[0] is None:
             rec = {"key": key, "status": "skipped", "note": out[1]}
             if verbose:
-                print(f"[dryrun] SKIP {key}: {out[1]}")
+                _log.info(f"SKIP {key}: {out[1]}")
             return rec
         lowered, note, traffic = out
         t_lower = time.time() - t0
@@ -257,9 +262,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         mem = compiled.memory_analysis()
         from repro.analysis.hlo_costs import cost_analysis_dict
         cost = cost_analysis_dict(compiled)
-        print(f"[dryrun] {key} memory_analysis: {mem}")
-        print(f"[dryrun] {key} cost_analysis: "
-              f"flops={cost.get('flops')} bytes={cost.get('bytes accessed')}")
+        _log.info(f"{key} memory_analysis: {mem}")
+        _log.info(f"{key} cost_analysis: "
+                  f"flops={cost.get('flops')} bytes={cost.get('bytes accessed')}")
         hlo = compiled.as_text()
         cfg = get_config(arch)
         shape = SHAPE_BY_NAME[shape_name]
@@ -270,10 +275,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec = {"key": key, "status": "ok", "lower_s": round(t_lower, 1),
                "compile_s": round(t_compile, 1), **rep.to_json()}
         if verbose:
-            print(f"[dryrun] OK {key} compute={rep.compute_s:.3e}s "
-                  f"mem={rep.memory_s:.3e}s coll={rep.collective_s:.3e}s "
-                  f"dominant={rep.dominant} hbm={rep.hbm_total_gib:.1f}GiB "
-                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+            _log.info(f"OK {key} compute={rep.compute_s:.3e}s "
+                      f"mem={rep.memory_s:.3e}s coll={rep.collective_s:.3e}s "
+                      f"dominant={rep.dominant} hbm={rep.hbm_total_gib:.1f}GiB "
+                      f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
         return rec
     except Exception as e:                                     # noqa: BLE001
         traceback.print_exc()
@@ -328,7 +333,7 @@ def main() -> None:
                 if args.tuned and (arch, shape_name) not in TUNINGS:
                     continue
                 if not args.force and res.get(key, {}).get("status") == "ok":
-                    print(f"[dryrun] cached {key}")
+                    _log.info(f"cached {key}")
                     continue
                 rec = run_cell(arch, shape_name, mp, tuned=args.tuned)
                 res[key] = rec
@@ -336,7 +341,7 @@ def main() -> None:
     n_ok = sum(1 for r in res.values() if r.get("status") == "ok")
     n_skip = sum(1 for r in res.values() if r.get("status") == "skipped")
     n_err = sum(1 for r in res.values() if r.get("status") == "error")
-    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    _log.info(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
     if n_err:
         raise SystemExit(1)
 

@@ -34,9 +34,29 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.trace import get_tracer
 from repro.serve.serve_loop import DEFAULT_BUCKETS, _norm_step_schedule
 from repro.sim.faults import NEVER, FaultTrace
 from repro.sim.trace import Trace, bucket_sizes
+
+
+def _publish_fleet_obs(n: int, timeline, shed_mask=None, retries=None,
+                       rung_tl=None) -> None:
+    """End-of-run counter publication (DESIGN.md §18): everything here is
+    derived from state the simulation already built, so the fleet loops
+    carry zero per-event instrumentation cost in either tracer state."""
+    tr = get_tracer()
+    if not tr.enabled:
+        return
+    tr.count("fleet.runs")
+    tr.count("fleet.requests", n)
+    tr.count("fleet.scale_events", max(len(timeline) - 1, 0))
+    if shed_mask is not None:
+        tr.count("fleet.shed", int(shed_mask.sum()))
+    if retries is not None:
+        tr.count("fleet.retries", int(retries.sum()))
+    if rung_tl is not None:
+        tr.count("fleet.rung_transitions", max(len(rung_tl) - 1, 0))
 
 
 def open_loop_schedule(arrivals: Sequence[float], max_new: Sequence[int], *,
@@ -462,6 +482,7 @@ def simulate_fleet(trace: Trace, policy: AutoscalePolicy, *,
             s0, s1 = segs[r][-1]         # estimate said drained, exact
             segs[r][-1] = (s0, max(s1, float(completions[idx].max())))
         cost += sum(max(s1 - s0, 0.0) for s0, s1 in segs[r])
+    _publish_fleet_obs(n, timeline)
     return FleetReport(arrivals=arr, admissions=admissions,
                        completions=completions, latency=completions - arr,
                        assignment=assignment, routed_at=routed_at,
@@ -791,6 +812,8 @@ def _simulate_fleet_chaos(trace: Trace, policy: AutoscalePolicy, *,
                 s0, s1 = segs[r][-1]
                 segs[r][-1] = (s0, max(s1, float(max(fin))))
         cost += sum(max(s1 - s0, 0.0) for s0, s1 in segs[r])
+    _publish_fleet_obs(n, timeline, shed_mask=shed_mask, retries=retries,
+                       rung_tl=rung_tl)
     return FleetReport(arrivals=arr, admissions=admissions,
                        completions=completions, latency=completions - arr,
                        assignment=assignment, routed_at=routed_at,

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import ModelAPI
+from repro.obs.trace import get_tracer
 from repro.sim.trace import bucket_sizes
 
 # decode-length buckets every serving layer shares (each a multiple of the
@@ -412,6 +413,15 @@ class ServeSession:
             and np.isfinite(completions[~shed_mask]).all() \
             and np.isinf(completions[shed_mask]).all(), \
             "open-loop accounting broken: admissions != completions + shed"
+        tr = get_tracer()
+        if tr.enabled:
+            # counters accumulated as plain loop locals, published once
+            tr.count("serve.runs")
+            tr.count("serve.requests", n)
+            tr.count("serve.decode_steps", decode_steps)
+            tr.count("serve.prefills", prefills)
+            tr.count("serve.rung_switches", switches)
+            tr.count("serve.shed", int(shed_mask.sum()))
         return ServeReport(arrivals=arrivals, admissions=admissions,
                            completions=completions,
                            latency=completions - arrivals,

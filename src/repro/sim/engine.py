@@ -46,6 +46,7 @@ import numpy as np
 from repro.core.dse import PartitionResult, boundary_activations
 from repro.core.perf_model import (ACT_BYTES, HardwareModel, LayerCost,
                                    TPUModel)
+from repro.obs.trace import get_tracer
 from repro.sim.faults import FaultTrace, NodeFaults
 from repro.sim.trace import Trace, backlogged_trace
 
@@ -693,6 +694,19 @@ def simulate_partition(layers: Sequence[LayerCost], hw: HardwareModel,
         fx = NodeFaults.for_chain(faults, len(rates), mode)
     completions, busy, blocked, idle, q_mean, q_max, down = _simulate_chain(
         arrivals, sizes, service, caps, engine=engine, fx=fx)
+    tr = get_tracer()
+    if tr.enabled:
+        # no per-event cost even when tracing: a full chain serves every
+        # request once per node, so the event count (N arrivals + N*M
+        # service finishes) is derivable after the fact
+        M = len(service)
+        fast = engine == "calendar" and M == 1 and fx is None
+        tr.count("sim.runs")
+        tr.count(f"sim.mode.{mode}")
+        tr.count("sim.engine.single_server" if fast
+                 else f"sim.engine.{engine}")
+        tr.count("sim.requests", N)
+        tr.count("sim.events", N * (M + 1))
     return SimReport(mode=mode, node_names=names, arrivals=arrivals,
                      sizes=sizes, completions=completions,
                      latency=completions - arrivals,

@@ -24,6 +24,7 @@ accuracy and throughput against serving latency.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, replace
 from typing import List, Optional, Sequence
 
@@ -31,6 +32,7 @@ import numpy as np
 
 from repro.core.dse import DSECache, PartitionResult, partition_pipeline
 from repro.core.perf_model import HardwareModel, LayerCost, TPUModel
+from repro.obs.trace import get_tracer
 from repro.sim.engine import SimReport, simulate_partition
 from repro.sim.faults import FaultTrace
 from repro.sim.trace import Trace
@@ -76,7 +78,8 @@ def slo_partition_search(layers: Sequence[LayerCost], hw: HardwareModel,
                          chip_budgets: Optional[Sequence[float]] = None,
                          q_depth: int = 8,
                          mode: str = "auto",
-                         faults=None) -> PartitionResult:
+                         faults=None,
+                         recorder=None) -> PartitionResult:
     """``partition_pipeline(objective="slo")``: pick the partitioning whose
     *simulated* deployment meets the latency SLO (see module docstring for
     the candidate set and selection rule). ``slo`` is an ``SLO`` or a bare
@@ -90,7 +93,12 @@ def slo_partition_search(layers: Sequence[LayerCost], hw: HardwareModel,
     {nominal} ∪ scenarios — the winner is the max-capacity candidate whose
     tail survives the whole fault set, not just clear weather. The winner's
     per-scenario reports come back in ``fault_reports`` (nominal stays in
-    ``sim_report``)."""
+    ``sim_report``).
+
+    ``recorder`` (a ``repro.obs.FlightRecorder``) emits one JSONL record
+    per simulated candidate — cuts, tail latency, capacity, feasibility,
+    and simulate-phase wall time; when the process tracer is enabled each
+    candidate also gets a span. Neither changes any returned value."""
     if trace is None:
         raise ValueError("objective='slo' needs trace= (the offered load)")
     if slo is None:
@@ -113,14 +121,34 @@ def slo_partition_search(layers: Sequence[LayerCost], hw: HardwareModel,
             if tuple(c.cuts) not in seen:
                 seen.add(tuple(c.cuts))
                 cands.append(c)
-    sims = [simulate_partition(layers, hw, c, trace, q_depth=q_depth,
-                               reconfig_cycles=reconfig_cycles, mode=mode)
-            for c in cands]
+    tr = get_tracer()
+    obs = tr.enabled or recorder is not None
+    clk = tr.now if tr.enabled else time.perf_counter
+    if recorder is not None:
+        recorder.header("slo_partition_search", n_parts=n_parts,
+                        n_candidates=len(cands), slo_target=slo.target,
+                        slo_quantile=slo.quantile, batch=batch,
+                        dse_iters=dse_iters, mode=mode,
+                        n_faults=len(_fault_set(faults)))
     scenarios = _fault_set(faults)
-    fsims = [[simulate_partition(layers, hw, c, trace, q_depth=q_depth,
-                                 reconfig_cycles=reconfig_cycles, mode=mode,
-                                 faults=f) for f in scenarios]
-             for c in cands]
+    sims: List[SimReport] = []
+    fsims: List[List[SimReport]] = []
+    durs: List[float] = []
+    for k, c in enumerate(cands):
+        t0 = clk() if obs else 0.0
+        sims.append(simulate_partition(layers, hw, c, trace, q_depth=q_depth,
+                                       reconfig_cycles=reconfig_cycles,
+                                       mode=mode))
+        fsims.append([simulate_partition(layers, hw, c, trace,
+                                         q_depth=q_depth,
+                                         reconfig_cycles=reconfig_cycles,
+                                         mode=mode, faults=f)
+                      for f in scenarios])
+        t1 = clk() if obs else 0.0
+        durs.append(t1 - t0)
+        if tr.enabled:
+            tr.add_span("slo.candidate", t0, t1, depth=0, i=k,
+                        cuts=[int(v) for v in c.cuts])
     lats = [max([latency_percentile(r, slo.quantile)]
                 + [latency_percentile(fr, slo.quantile) for fr in frs])
             for r, frs in zip(sims, fsims)]
@@ -142,6 +170,21 @@ def slo_partition_search(layers: Sequence[LayerCost], hw: HardwareModel,
         win = min(tied, key=lambda k: (lats[k], len(cands[k].cuts), k))
     else:
         win = min(range(len(cands)), key=lambda k: (lats[k], k))
+    if recorder is not None:
+        # scores only exist once the shared-trace sims are in, so the
+        # per-candidate records land here rather than inside the sim loop
+        for k, c in enumerate(cands):
+            recorder.trial(index=k, x=[int(v) for v in c.cuts],
+                           score=-lats[k],
+                           metrics={"p99": lats[k],
+                                    "capacity": capacity(c),
+                                    "feasible": bool(lats[k] <= slo.target)},
+                           phases={"simulate": durs[k]},
+                           objective=c.objective)
+        recorder.footer(winner=win, n_feasible=len(feasible))
+    if tr.enabled:
+        tr.count("slo.candidates", len(cands))
+        tr.count("slo.feasible", len(feasible))
     out = replace(cands[win], objective="slo")
     out.sim_report = sims[win]
     if scenarios:
@@ -154,7 +197,7 @@ def autoscale_policy_search(trace: Trace, *, batch_slots: int,
                             buckets=None, max_replicas: int = 4,
                             slo=None, n_trials: int = 48, seed: int = 0,
                             faults=None, retry=None, degradation=None,
-                            deadline_cycles=None):
+                            deadline_cycles=None, recorder=None):
     """TPE over fleet autoscaling-policy knobs (DESIGN.md §14).
 
     The search space is ``repro.serve.fleet.AutoscalePolicy``'s knobs —
@@ -186,7 +229,13 @@ def autoscale_policy_search(trace: Trace, *, batch_slots: int,
     ``1000 * excess_shed_fraction`` versus the static best and feasibility
     additionally requires shedding no more than it, so the winner is the
     cheapest policy whose tail AND completion rate both survive the fault
-    set (failure-aware SLO search, DESIGN.md §17)."""
+    set (failure-aware SLO search, DESIGN.md §17).
+
+    ``recorder`` (a ``repro.obs.FlightRecorder``) logs one JSONL record
+    per TPE trial — knob vector, score, p99/cost/shed, per-phase wall
+    time — plus a footer carrying the baselines and the winner; when the
+    process tracer is enabled each trial also gets propose/evaluate/tell
+    spans. Neither changes any returned value."""
     from repro.core.tpe import TPE
     from repro.serve.fleet import AutoscalePolicy, simulate_fleet
     from repro.serve.serve_loop import DEFAULT_BUCKETS
@@ -200,6 +249,14 @@ def autoscale_policy_search(trace: Trace, *, batch_slots: int,
               deadline_cycles=deadline_cycles)
     max_replicas = max(int(max_replicas), 1)
     n_req = len(trace.arrivals)
+    tr = get_tracer()
+    obs = tr.enabled or recorder is not None
+    clk = tr.now if tr.enabled else time.perf_counter
+    if recorder is not None:
+        recorder.header("autoscale_policy_search", n_trials=n_trials,
+                        seed=seed, max_replicas=max_replicas,
+                        batch_slots=batch_slots, n_requests=n_req,
+                        slo_target=(slo.target if slo is not None else None))
 
     def p99_of(rep) -> float:
         # a chaos trial that sheds every request has no latency sample;
@@ -238,18 +295,35 @@ def autoscale_policy_search(trace: Trace, *, batch_slots: int,
 
     opt = TPE(lo, hi, seed=seed)
     trials = []
-    for _ in range(max(int(n_trials), 1)):
+    for i in range(max(int(n_trials), 1)):
+        t0 = clk() if obs else 0.0
         x = opt.ask()
+        t1 = clk() if obs else 0.0
         pol = decode(x)
         rep = simulate_fleet(trace, pol, **kw)
+        t2 = clk() if obs else 0.0
         p99_t = p99_of(rep)
         hinge = max(0.0, p99_t / p99_s - 1.0)
         if slo is not None:
             hinge += max(0.0, p99_t / slo.target - 1.0)
         shed_pen = 10.0 * max(0, rep.shed - shed_s) / max(n_req, 1)
-        opt.tell(x, -(rep.replica_cycles / cost_s) - 100.0 * hinge
-                 - 100.0 * shed_pen)
+        score = -(rep.replica_cycles / cost_s) - 100.0 * hinge \
+            - 100.0 * shed_pen
+        opt.tell(x, score)
         trials.append((pol, rep))
+        t3 = clk() if obs else 0.0
+        if tr.enabled:
+            tr.add_span("trial", t0, t3, depth=0, i=i)
+            tr.add_span("propose", t0, t1, depth=1)
+            tr.add_span("evaluate", t1, t2, depth=1)
+            tr.add_span("tell", t2, t3, depth=1)
+        if recorder is not None:
+            recorder.trial(index=i, x=x, score=score,
+                           metrics={"p99": p99_t,
+                                    "replica_cycles": rep.replica_cycles,
+                                    "shed": rep.shed},
+                           phases={"propose": t1 - t0, "evaluate": t2 - t1,
+                                   "tell": t3 - t2})
     feasible = [k for k, (_, rep) in enumerate(trials)
                 if p99_of(rep) <= p99_s and rep.shed <= shed_s
                 and (slo is None or p99_of(rep) <= slo.target)]
@@ -259,6 +333,13 @@ def autoscale_policy_search(trace: Trace, *, batch_slots: int,
         win = min(range(len(trials)),
                   key=lambda k: (p99_of(trials[k][1]), k))
     policy, report = trials[win]
+    if tr.enabled:
+        tr.count("autoscale.trials", len(trials))
+        tr.count("autoscale.feasible", len(feasible))
+    if recorder is not None:
+        recorder.footer(winner=win, n_feasible=len(feasible),
+                        static_best=static_best,
+                        static_p99=p99_s, static_cost=cost_s)
     return policy, report, baselines
 
 

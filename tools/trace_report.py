@@ -1,0 +1,183 @@
+"""Flight-recorder report tool: summarize or diff search runs.
+
+A flight-recorder run (``repro.obs.FlightRecorder``) is one JSONL file:
+a ``header`` record (search name + config), one ``trial`` record per
+evaluated proposal (index, x, score, metric terms, cache/engine counter
+deltas, per-phase wall seconds), and a ``footer`` with run-level totals.
+
+    python tools/trace_report.py summary run.jsonl [--top 5]
+    python tools/trace_report.py diff a.jsonl b.jsonl
+
+``summary`` prints the per-phase time breakdown, DSE-cache efficiency,
+engine dispatch mix, and the top-k slowest trials. ``diff`` compares two
+runs of the *same* search: per-phase timing deltas, trial-count and
+score divergence (first trial where x or score differs — zero for two
+same-seed runs, by the recorder's bit-identity contract).
+
+Standalone on purpose: records are parsed inline (stdlib json only), so
+the tool runs without PYTHONPATH or the repro package installed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+
+def load_run(path: str) -> dict:
+    """Parse one JSONL run into ``{"header", "trials", "footer"}``.
+    Tolerates a missing footer (crashed/killed run) — ``footer`` is then
+    ``None`` and totals are rebuilt from the trial records."""
+    header = footer = None
+    trials: List[dict] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            kind = rec.get("record")
+            if kind == "header":
+                header = rec
+            elif kind == "trial":
+                trials.append(rec)
+            elif kind == "footer":
+                footer = rec
+    if header is None:
+        raise SystemExit(f"{path}: no header record — not a recorder run")
+    return {"header": header, "trials": trials, "footer": footer}
+
+
+def _sum_field(trials: List[dict], field: str) -> dict:
+    out: dict = {}
+    for t in trials:
+        for k, v in (t.get(field) or {}).items():
+            out[k] = out.get(k, 0) + v
+    return out
+
+
+def totals_of(run: dict) -> dict:
+    """Run-level totals: the footer's, or rebuilt from trials when the
+    run died before writing one."""
+    if run["footer"] is not None:
+        return run["footer"].get("totals", {})
+    return {"cache": _sum_field(run["trials"], "cache"),
+            "engine": _sum_field(run["trials"], "engine"),
+            "phases": _sum_field(run["trials"], "phases")}
+
+
+def _fmt_s(s: float) -> str:
+    return f"{s * 1e3:9.3f} ms" if s < 1.0 else f"{s:9.3f} s "
+
+
+def summarize(run: dict, top: int = 5, out=sys.stdout) -> None:
+    h, trials, footer = run["header"], run["trials"], run["footer"]
+    tot = totals_of(run)
+    w = out.write
+    w(f"search   : {h.get('search', '?')}\n")
+    cfg = h.get("config", {})
+    if cfg:
+        w("config   : " + ", ".join(f"{k}={v}" for k, v in
+                                    sorted(cfg.items())) + "\n")
+    n = footer["n_trials"] if footer else len(trials)
+    w(f"trials   : {n}\n")
+    if footer and footer.get("best_score") is not None:
+        w(f"best     : {footer['best_score']:.6g}\n")
+    if footer and footer.get("wall_s") is not None:
+        w(f"wall     : {_fmt_s(footer['wall_s'])}\n")
+    phases = tot.get("phases", {})
+    ptot = sum(phases.values())
+    if phases:
+        w("phases   :\n")
+        for k, v in sorted(phases.items(), key=lambda kv: -kv[1]):
+            share = 100.0 * v / ptot if ptot > 0 else 0.0
+            w(f"  {k:<12} {_fmt_s(v)}  {share:5.1f}%\n")
+    cache = tot.get("cache", {})
+    if cache:
+        runs = cache.get("cold_runs", 0)
+        reuse = (cache.get("hits", 0) + cache.get("warm_l1", 0)
+                 + cache.get("warm_l2", 0))
+        denom = runs + reuse
+        eff = 100.0 * reuse / denom if denom > 0 else 0.0
+        w("cache    : " + ", ".join(f"{k}={v}" for k, v in
+                                    sorted(cache.items()))
+          + f"  (reuse {eff:.1f}%)\n")
+    engine = {k: v for k, v in tot.get("engine", {}).items() if v}
+    if engine:
+        w("engine   : " + ", ".join(f"{k}={v}" for k, v in
+                                    sorted(engine.items())) + "\n")
+    if trials and top > 0:
+        slow = sorted(trials, key=lambda t: -sum((t.get("phases")
+                                                  or {}).values()))[:top]
+        w(f"slowest {min(top, len(trials))} trials:\n")
+        for t in slow:
+            dt = sum((t.get("phases") or {}).values())
+            w(f"  #{t['i']:<4} {_fmt_s(dt)}  score={t.get('score'):.6g}\n")
+
+
+def diff_runs(a: dict, b: dict, out=sys.stdout) -> int:
+    """Print per-phase deltas and trial divergence between two runs of
+    the same search. Returns the number of diverging trials (compared
+    index-by-index on x and score; length mismatch counts the tail)."""
+    w = out.write
+    sa, sb = a["header"].get("search"), b["header"].get("search")
+    if sa != sb:
+        w(f"WARNING: different searches ({sa} vs {sb})\n")
+    ta, tb = a["trials"], b["trials"]
+    w(f"trials   : {len(ta)} vs {len(tb)}"
+      + (f"  (count differs by {abs(len(ta) - len(tb))})\n"
+         if len(ta) != len(tb) else "\n"))
+    diverged = abs(len(ta) - len(tb))
+    first: Optional[int] = None
+    for i, (x, y) in enumerate(zip(ta, tb)):
+        if x.get("x") != y.get("x") or x.get("score") != y.get("score"):
+            diverged += 1
+            if first is None:
+                first = i
+    if first is not None:
+        w(f"diverge  : {diverged} trials differ, first at #{first} "
+          f"(score {ta[first].get('score'):.6g} vs "
+          f"{tb[first].get('score'):.6g})\n")
+    elif diverged:
+        w(f"diverge  : {diverged} trials differ (tail beyond the shorter "
+          "run)\n")
+    else:
+        w("diverge  : 0 trials — identical proposals and scores\n")
+    pa = totals_of(a).get("phases", {})
+    pb = totals_of(b).get("phases", {})
+    keys = sorted(set(pa) | set(pb))
+    if keys:
+        w("phase deltas (b - a):\n")
+        for k in keys:
+            va, vb = pa.get(k, 0.0), pb.get(k, 0.0)
+            pct = 100.0 * (vb - va) / va if va > 0 else float("inf")
+            w(f"  {k:<12} {_fmt_s(va)} -> {_fmt_s(vb)}  "
+              f"({vb - va:+.6f} s, {pct:+.1f}%)\n")
+    fa, fb = a["footer"], b["footer"]
+    if fa and fb and fa.get("wall_s") is not None \
+            and fb.get("wall_s") is not None:
+        w(f"wall     : {_fmt_s(fa['wall_s'])} -> {_fmt_s(fb['wall_s'])}\n")
+    return diverged
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    s = sub.add_parser("summary", help="summarize one recorded run")
+    s.add_argument("run")
+    s.add_argument("--top", type=int, default=5,
+                   help="how many slowest trials to list")
+    d = sub.add_parser("diff", help="compare two recorded runs")
+    d.add_argument("run_a")
+    d.add_argument("run_b")
+    args = ap.parse_args(argv)
+    if args.cmd == "summary":
+        summarize(load_run(args.run), top=args.top)
+        return 0
+    diff_runs(load_run(args.run_a), load_run(args.run_b))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
